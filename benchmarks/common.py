@@ -1,0 +1,78 @@
+"""Shared benchmark machinery: datasets, the method lineup, timing helpers.
+
+Scale note: the container is a single CPU core; Ns default to reduced
+versions of the paper's datasets (COIL-20: N=720 exact; MNIST: N=2000 vs
+the paper's 20000).  Every benchmark takes --n/--budget flags so the full
+paper scale can be run on real hardware.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (DiagH, FP, GD, LBFGS, NonlinearCG, SD, SDMinus,
+                        LSConfig, laplacian_eigenmaps, make_affinities,
+                        minimize)
+from repro.data import coil_like, mnist_like
+
+# the paper's lineup (Fig. 1/2/4). SD uses the adaptive initial step the
+# paper describes; quasi-Newton methods start at the natural alpha = 1.
+METHODS = [
+    ("GD", lambda: GD(), "one"),
+    ("FP", lambda: FP(), "one"),
+    ("DiagH", lambda: DiagH(), "one"),
+    ("CG", lambda: NonlinearCG(), "one"),
+    ("L-BFGS", lambda: LBFGS(m=100), "one"),
+    ("SD-", lambda: SDMinus(), "adaptive_grow"),
+    ("SD", lambda: SD(), "adaptive_grow"),
+]
+
+
+def method_by_name(name: str, **kw):
+    for n, mk, ls in METHODS:
+        if n == name:
+            return mk(), ls
+    if name.startswith("SD(k"):
+        kappa = int(name[4:-1])
+        return SD(kappa=kappa), "adaptive_grow"
+    raise ValueError(name)
+
+
+def coil_problem(n_per=72, loops=10, dim=256, perplexity=20.0, model="ee"):
+    Y = jnp.asarray(coil_like(n_per=n_per, loops=loops, dim=dim))
+    aff = make_affinities(Y, perplexity, model=model)
+    X0 = laplacian_eigenmaps(aff.Wp, 2) * 0.1
+    return Y, aff, X0
+
+
+def mnist_problem(n=2000, perplexity=30.0, model="ee"):
+    Y, labels = mnist_like(n=n)
+    Y = jnp.asarray(Y)
+    aff = make_affinities(Y, perplexity, model=model)
+    X0 = laplacian_eigenmaps(aff.Wp, 2) * 0.1
+    return Y, aff, X0, labels
+
+
+def run_method(name, aff, X0, kind, lam, max_iters=200, tol=0.0,
+               max_seconds=None, kappa=None):
+    strat, ls = method_by_name(name)
+    if kappa is not None and name == "SD":
+        strat = SD(kappa=kappa)
+    res = minimize(X0, aff, kind, lam, strat, max_iters=max_iters, tol=tol,
+                   ls_cfg=LSConfig(init_step=ls), max_seconds=max_seconds)
+    return res
+
+
+def time_to_target(res, target_e):
+    """Wall-clock seconds (incl. setup) to first reach target_e, or inf."""
+    below = np.nonzero(res.energies <= target_e)[0]
+    if len(below) == 0:
+        return float("inf")
+    return float(res.times[below[0]] + res.setup_time)
+
+
+def csv_row(*fields):
+    print(",".join(str(f) for f in fields), flush=True)

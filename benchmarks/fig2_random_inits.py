@@ -1,0 +1,52 @@
+"""Paper Fig. 2: COIL-20, fixed wall-clock budget from random initial X,
+final energy spread per method (robustness to initialization)."""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from .common import METHODS, coil_problem, csv_row, run_method
+
+
+def run(n_inits=8, budget_s=4.0, kinds=("ee",), out_json=None):
+    results = {}
+    for kind in kinds:
+        lam = 100.0 if kind == "ee" else 1.0
+        _, aff, X0_spec = coil_problem(model=kind)
+        N = X0_spec.shape[0]
+        per_method = {name: [] for name, _, _ in METHODS}
+        for i in range(n_inits):
+            X0 = jax.random.normal(jax.random.PRNGKey(100 + i),
+                                   (N, 2)) * 1e-3
+            for name, _, _ in METHODS:
+                res = run_method(name, aff, X0, kind, lam,
+                                 max_iters=100_000, max_seconds=budget_s)
+                per_method[name].append(
+                    (float(res.energies[-1]), int(res.n_iters)))
+        for name, vals in per_method.items():
+            es = np.array([v[0] for v in vals])
+            its = np.array([v[1] for v in vals])
+            csv_row("fig2", kind, name, f"{es.mean():.6g}",
+                    f"{es.std():.3g}", f"{es.min():.6g}",
+                    int(its.mean()))
+        results[kind] = {n: v for n, v in per_method.items()}
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(results, f)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--inits", type=int, default=8)
+    ap.add_argument("--budget", type=float, default=4.0)
+    ap.add_argument("--out", default=None)
+    a = ap.parse_args()
+    run(n_inits=a.inits, budget_s=a.budget, out_json=a.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Render the dry-run JSONL into the EXPERIMENTS.md roofline tables and
+pick the three hillclimb cells (worst roofline fraction, most
+collective-bound, most representative of the paper's technique)."""
+from __future__ import annotations
+
+import argparse
+import json
+from collections import defaultdict
+
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+
+
+def load(path):
+    rows = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                rows.append(json.loads(line))
+    # keep the newest row per key
+    by_key = {}
+    for r in rows:
+        by_key[(r["arch"], r["shape"], r["mesh"], r.get("tag", "baseline"))] = r
+    return list(by_key.values())
+
+
+def fmt_bytes(b):
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if b < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def table(rows, mesh="single", tag="baseline"):
+    rows = [r for r in rows if r["mesh"] == mesh and r.get("tag") == tag]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = ["| arch | shape | compute s | memory s | collective s | dominant "
+           "| useful ratio | HBM/dev |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        mem = r.get("memory", {})
+        hbm = mem.get("argument_size_in_bytes", 0) + \
+            mem.get("temp_size_in_bytes", 0)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} "
+            f"| {r['memory_s']:.3f} | {r['collective_s']:.3f} "
+            f"| {r['dominant']} | {r['useful_ratio']:.3f} "
+            f"| {fmt_bytes(hbm)} |")
+    return "\n".join(out)
+
+
+def pick_hillclimb(rows):
+    """worst useful_ratio, most collective-bound, paper-representative."""
+    singles = [r for r in rows if r["mesh"] == "single"
+               and r.get("tag") == "baseline"
+               and not r["arch"].startswith("embedding")]
+    worst = min(singles, key=lambda r: r["useful_ratio"])
+    coll = max(singles, key=lambda r: (r["collective_s"] /
+                                       max(r["compute_s"], 1e-9)))
+    emb = [r for r in rows if r["arch"].startswith("embedding")]
+    rep = emb[0] if emb else max(
+        singles, key=lambda r: r["flops_per_chip"])
+    return worst, coll, rep
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default="results/dryrun.jsonl")
+    a = ap.parse_args()
+    rows = load(a.path)
+    for mesh in ("single", "multi"):
+        print(f"\n### mesh: {mesh}\n")
+        print(table(rows, mesh=mesh))
+    w, c, r = pick_hillclimb(rows)
+    print("\nhillclimb picks:")
+    print(f"  worst-ratio:       {w['arch']} x {w['shape']} "
+          f"(ratio {w['useful_ratio']:.3f})")
+    print(f"  collective-bound:  {c['arch']} x {c['shape']} "
+          f"(coll/comp {c['collective_s']/max(c['compute_s'],1e-9):.2f})")
+    print(f"  paper-representative: {r['arch']} x {r['shape']}")
+
+
+if __name__ == "__main__":
+    main()

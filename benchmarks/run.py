@@ -1,0 +1,60 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints name,...,derived CSV rows.  --quick (default) uses container-scale
+Ns so the whole suite finishes on one CPU core; --full uses paper scale.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import (fig1_learning_curves, fig2_random_inits,
+                        fig3_homotopy, fig4_large, sd_overhead)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale Ns (hours on this container)")
+    a, _ = ap.parse_known_args()
+
+    os.makedirs("results", exist_ok=True)
+    print("table,fields...,derived")
+    if a.full:
+        fig1_learning_curves.run(n_per=72, loops=10, iters=400,
+                                 out_json="results/fig1.json")
+        fig1_learning_curves.headline(n_per=72, loops=10, budget_s=420.0)
+        fig2_random_inits.run(n_inits=50, budget_s=20.0,
+                              out_json="results/fig2.json")
+        fig3_homotopy.run(n_stages=50, max_iters=10_000,
+                          out_json="results/fig3.json")
+        fig4_large.run(n=20_000, budget_s=3600.0, kappa=7,
+                       out_json="results/fig4.json")
+        sd_overhead.run(ns=(1000, 5000, 20_000))
+    else:
+        fig1_learning_curves.run(n_per=36, loops=6, iters=60,
+                                 out_json="results/fig1.json")
+        # the paper's headline claim at COIL-720 scale (SD's 200-iter energy
+        # vs GD/FP given a 120 s budget -> 'speedup > Nx' rows)
+        fig1_learning_curves.headline(n_per=72, loops=10, budget_s=120.0)
+        fig2_random_inits.run(n_inits=4, budget_s=2.0,
+                              out_json="results/fig2.json")
+        fig3_homotopy.run(n_stages=6, max_iters=150,
+                          out_json="results/fig3.json")
+        fig4_large.run(n=1200, budget_s=10.0,
+                       out_json="results/fig4.json")
+        sd_overhead.run(ns=(500, 1000))
+    # roofline table if a dry-run sweep exists
+    if os.path.exists("results/dryrun.jsonl"):
+        from benchmarks import roofline_report
+        rows = roofline_report.load("results/dryrun.jsonl")
+        print(f"roofline,rows,{len(rows)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Paper §2 claim: the SD direction costs less than the gradient itself
+(two triangular backsolves vs the O(N^2 d) pairwise pass), and the one-time
+Cholesky factorization amortizes immediately.
+
+Measures, per N: gradient eval time, SD backsolve time, Cholesky setup time.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SD, energy_and_grad, make_affinities
+from repro.data import mnist_like
+
+from .common import csv_row
+
+
+def _t(f, reps=5):
+    f()  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f())
+    return (time.perf_counter() - t0) / reps
+
+
+def run(ns=(500, 1000, 2000), kind="ee", lam=100.0):
+    rows = []
+    for n in ns:
+        Y, _ = mnist_like(n=n)
+        aff = make_affinities(jnp.asarray(Y), 30.0, model=kind)
+        X = jax.random.normal(jax.random.PRNGKey(0), (n, 2)) * 0.1
+        strat = SD()
+        t0 = time.perf_counter()
+        state = jax.block_until_ready(strat.init(X, aff, kind, lam))
+        t_setup = time.perf_counter() - t0
+
+        eg = jax.jit(lambda X: energy_and_grad(X, aff, kind, lam))
+        _, G = eg(X)
+        t_grad = _t(lambda: eg(X))
+        direction = jax.jit(
+            lambda G: strat.direction(state, X, G, aff, kind, lam)[0])
+        t_dir = _t(lambda: direction(G))
+        csv_row("sd_overhead", n, f"{t_grad*1e3:.2f}ms",
+                f"{t_dir*1e3:.2f}ms", f"{t_setup:.2f}s",
+                f"dir/grad={t_dir/t_grad:.2f}")
+        rows.append((n, t_grad, t_dir, t_setup))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ns", type=int, nargs="+", default=[500, 1000, 2000])
+    a = ap.parse_args()
+    run(ns=tuple(a.ns))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""repro: spectral-direction partial-Hessian framework for nonlinear
+embeddings (Vladymyrov & Carreira-Perpinan, ICML 2012) + multi-pod JAX
+LM runtime. See README.md / DESIGN.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,38 @@
+# The paper's primary contribution: the generic attraction-repulsion
+# embedding formulation and the partial-Hessian optimization strategies
+# (spectral direction et al.).  See DESIGN.md §1-3.
+from .affinities import (
+    Affinities,
+    make_affinities,
+    sne_affinities,
+    sne_affinities_from_d2,
+    sq_distances,
+)
+from .baselines import LBFGS, NonlinearCG
+from .homotopy import HomotopyResult, homotopy_path
+from .linesearch import LSConfig
+from .minimize import MinimizeResult, minimize
+from .objectives import (
+    NORMALIZED,
+    attractive_weights,
+    direct_energy,
+    energy,
+    energy_and_grad,
+    grad,
+    gradient_weights,
+    is_normalized,
+)
+from .spectral_init import laplacian_eigenmaps
+from .strategies import DiagH, FP, GD, SD, SDMinus, make_strategy
+
+__all__ = [
+    "Affinities", "make_affinities", "sne_affinities",
+    "sne_affinities_from_d2", "sq_distances",
+    "LBFGS", "NonlinearCG",
+    "HomotopyResult", "homotopy_path",
+    "LSConfig", "MinimizeResult", "minimize",
+    "NORMALIZED", "attractive_weights", "direct_energy", "energy",
+    "energy_and_grad", "grad", "gradient_weights", "is_normalized",
+    "laplacian_eigenmaps",
+    "DiagH", "FP", "GD", "SD", "SDMinus", "make_strategy",
+]

@@ -1,0 +1,129 @@
+"""Baseline optimizers the paper compares against: L-BFGS and nonlinear CG.
+
+Both are expressed in the same Strategy interface as the partial-Hessian
+methods (strategies.py) so the minimize driver, line search and accounting
+are identical across all methods — as in the paper's experimental setup.
+
+L-BFGS: two-loop recursion over a circular buffer of m (s, y) pairs
+(paper found m = 100 best), jit-compatible via lax.fori_loop + masking.
+Pairs are only stored when <s, y> > 0 (curvature condition), the standard
+safeguard when using a backtracking (Armijo-only) line search.
+
+Nonlinear CG: Polak-Ribiere+ with automatic restarts when the direction
+loses descent.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+State = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class LBFGS:
+    name: str = "L-BFGS"
+    m: int = 100
+
+    def init(self, X0, aff, kind, lam) -> State:
+        m = self.m
+        z = jnp.zeros((m,) + X0.shape, dtype=X0.dtype)
+        return {
+            "S": z,
+            "Y": z,
+            "rho": jnp.zeros((m,), dtype=X0.dtype),
+            "head": jnp.asarray(0, jnp.int32),    # next write slot
+            "count": jnp.asarray(0, jnp.int32),   # valid pairs
+            "prev_X": X0,
+            "prev_G": jnp.zeros_like(X0),
+            "started": jnp.asarray(False),
+        }
+
+    def _push(self, state, X, G):
+        s = X - state["prev_X"]
+        y = G - state["prev_G"]
+        sty = jnp.vdot(s, y)
+        ok = jnp.logical_and(state["started"], sty > 1e-10)
+        head = state["head"]
+
+        def do_push(st):
+            return {
+                **st,
+                "S": st["S"].at[head].set(s),
+                "Y": st["Y"].at[head].set(y),
+                "rho": st["rho"].at[head].set(1.0 / sty),
+                "head": (head + 1) % self.m,
+                "count": jnp.minimum(st["count"] + 1, self.m),
+            }
+
+        return jax.lax.cond(ok, do_push, lambda st: st, state)
+
+    def direction(self, state, X, G, aff, kind, lam):
+        state = self._push(state, X, G)
+        m, count, head = self.m, state["count"], state["head"]
+        S, Y, rho = state["S"], state["Y"], state["rho"]
+
+        def slot(i):
+            # i = 0 is the newest pair
+            return (head - 1 - i) % m
+
+        q = G
+        alphas = jnp.zeros((m,), dtype=X.dtype)
+
+        def loop1(i, carry):
+            q, alphas = carry
+            j = slot(i)
+            a = rho[j] * jnp.vdot(S[j], q)
+            valid = i < count
+            q = jnp.where(valid, q - a * Y[j], q)
+            alphas = alphas.at[i].set(jnp.where(valid, a, 0.0))
+            return q, alphas
+
+        q, alphas = jax.lax.fori_loop(0, m, loop1, (q, alphas))
+
+        jn = slot(0)
+        yty = jnp.vdot(Y[jn], Y[jn])
+        gamma = jnp.where(
+            count > 0, jnp.vdot(S[jn], Y[jn]) / jnp.maximum(yty, 1e-30), 1.0
+        )
+        r = gamma * q
+
+        def loop2(i, r):
+            ii = m - 1 - i  # oldest -> newest
+            j = slot(ii)
+            b = rho[j] * jnp.vdot(Y[j], r)
+            valid = ii < count
+            return jnp.where(valid, r + (alphas[ii] - b) * S[j], r)
+
+        r = jax.lax.fori_loop(0, m, loop2, r)
+        P = -r
+        # descent safeguard
+        P = jnp.where(jnp.vdot(P, G) < 0, P, -G)
+        state = {**state, "prev_X": X, "prev_G": G,
+                 "started": jnp.asarray(True)}
+        return P, state
+
+
+@dataclasses.dataclass(frozen=True)
+class NonlinearCG:
+    name: str = "CG"
+
+    def init(self, X0, aff, kind, lam) -> State:
+        return {
+            "prev_G": jnp.zeros_like(X0),
+            "prev_P": jnp.zeros_like(X0),
+            "started": jnp.asarray(False),
+        }
+
+    def direction(self, state, X, G, aff, kind, lam):
+        pg = state["prev_G"]
+        beta = jnp.vdot(G, G - pg) / jnp.maximum(jnp.vdot(pg, pg), 1e-30)
+        beta = jnp.maximum(beta, 0.0)  # PR+
+        P = jnp.where(state["started"], -G + beta * state["prev_P"], -G)
+        # restart if not a descent direction
+        P = jnp.where(jnp.vdot(P, G) < 0, P, -G)
+        return P, {"prev_G": G, "prev_P": P, "started": jnp.asarray(True)}

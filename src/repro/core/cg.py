@@ -1,0 +1,59 @@
+"""Batched linear conjugate gradients for the SD- strategy (paper §2).
+
+Solves B_i p_i = b_i for each embedding dimension i independently (the SD-
+partial Hessian is block-diagonal with one N x N block per dimension).
+Matches the paper's settings: exit at relative tolerance eps = 0.1 or 50
+iterations, warm-started from the previous outer iteration's solution.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+class CGResult(NamedTuple):
+    x: Array
+    n_iters: Array
+    rel_residual: Array
+
+
+def batched_cg(
+    B: Array,          # (d, N, N) pd blocks
+    b: Array,          # (d, N) right-hand sides
+    x0: Array,         # (d, N) warm start
+    tol: float = 0.1,
+    maxiter: int = 50,
+) -> CGResult:
+    def matvec(x):  # (d, N) -> (d, N)
+        return jnp.einsum("dnm,dm->dn", B, x)
+
+    b_norm = jnp.maximum(jnp.linalg.norm(b), 1e-30)
+    r0 = b - matvec(x0)
+
+    def cond(carry):
+        _, r, _, _, k = carry
+        return jnp.logical_and(
+            jnp.linalg.norm(r) > tol * b_norm, k < maxiter
+        )
+
+    def body(carry):
+        x, r, p, rs, k = carry
+        Bp = matvec(p)
+        denom = jnp.sum(p * Bp)
+        alpha = rs / jnp.maximum(denom, 1e-30)
+        x = x + alpha * p
+        r = r - alpha * Bp
+        rs_new = jnp.sum(r * r)
+        beta = rs_new / jnp.maximum(rs, 1e-30)
+        p = r + beta * p
+        return x, r, p, rs_new, k + 1
+
+    rs0 = jnp.sum(r0 * r0)
+    x, r, _, _, k = jax.lax.while_loop(
+        cond, body, (x0, r0, r0, rs0, jnp.asarray(0))
+    )
+    return CGResult(x=x, n_iters=k, rel_residual=jnp.linalg.norm(r) / b_norm)

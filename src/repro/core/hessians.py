@@ -1,0 +1,115 @@
+"""Hessian structure of the generic embedding objective (paper eqs. (2)-(3)).
+
+For normalized symmetric models:
+
+    H = 4 L (x) I_d  +  8 L^xx  -  16 lam vec(L^q X) vec(L^q X)^T
+
+with Laplacian weights (K1 etc. evaluated at t_nm = ||x_n - x_m||^2):
+
+    w_nm        = -K1 (p_nm - lam q_nm)
+    w^q_nm      = K1 q_nm
+    w^xx_{in,jm}= -(K21 p_nm - lam K2 q_nm) (x_in - x_im)(x_jn - x_jm)
+
+For unnormalized models E = sum f_nm(t_nm):
+
+    H = 4 L(f') (x) I_d + 8 L^xx(f'' . Delta_i Delta_j)
+
+These dense forms are used by the DiagH and SD- strategies and by the
+faithfulness tests (assembled full Hessian vs jax.hessian of the direct
+energy).  All O(N^2)-memory — benchmark scale, not the production path.
+
+Index convention: X is (N, d); the flattened Hessian uses (n, i) -> n*d + i,
+matching X.reshape(-1).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .affinities import Affinities, sq_distances
+from .objectives import gradient_weights, is_normalized
+
+Array = jnp.ndarray
+
+
+def _pair_quantities(X: Array, aff: Affinities, kind: str, lam):
+    """Returns (c, wq) where c_nm is the scalar factor of w^xx (so that
+    w^xx_{in,jm} = c_nm Delta_i Delta_j) and wq the L^q weights (or None)."""
+    t = sq_distances(X)
+    Wp, Wm = aff.Wp, aff.Wm
+    if kind == "ee":
+        return lam * Wm * jnp.exp(-t), None
+    if kind == "ssne":
+        G = Wm * jnp.exp(-t)
+        q = G / jnp.sum(G)
+        # K21 = 0, K2 = 1:  c = lam q ;  w^q = K1 q = -q
+        return lam * q, -q
+    if kind == "tsne":
+        K = 1.0 / (1.0 + t)
+        KW = Wm * K
+        q = KW / jnp.sum(KW)
+        # K21 = K^2, K2 = 2K^2:  c = -(p - 2 lam q) K^2 ;  w^q = -q K
+        return -(Wp - 2.0 * lam * q) * K * K, -q * K
+    if kind == "tee":
+        K = 1.0 / (1.0 + t)
+        # f- = lam w- K, f-'' = 2 lam w- K^3
+        return 2.0 * lam * Wm * K ** 3, None
+    if kind == "epan":
+        # piecewise linear repulsion: f-'' = 0 a.e.
+        return jnp.zeros_like(t), None
+    raise ValueError(f"unknown kind {kind!r}")
+
+
+def _lap(W: Array) -> Array:
+    return jnp.diag(jnp.sum(W, axis=-1)) - W
+
+
+def xx_weights_ii(X: Array, aff: Affinities, kind: str, lam) -> Array:
+    """Same-dimension (i = j) w^xx weights, shape (d, N, N):
+    wxx[i] = c * (Delta x_i)^2 — the ingredients of the SD- strategy."""
+    c, _ = _pair_quantities(X, aff, kind, lam)
+    diff = X.T[:, :, None] - X.T[:, None, :]  # (d, N, N)
+    return c[None] * diff * diff
+
+
+def lq_matmul(X: Array, aff: Affinities, kind: str, lam) -> Array | None:
+    """(L^q X) as (N, d), or None for unnormalized models."""
+    _, wq = _pair_quantities(X, aff, kind, lam)
+    if wq is None:
+        return None
+    return jnp.sum(wq, axis=-1)[:, None] * X - wq @ X
+
+
+def diag_hessian(X: Array, aff: Affinities, kind: str, lam) -> Array:
+    """Exact diagonal of the full Hessian, shape (N, d) — DiagH strategy."""
+    w = gradient_weights(X, aff, kind, lam)
+    deg_w = jnp.sum(w, axis=-1)                     # (N,)
+    wxx_ii = xx_weights_ii(X, aff, kind, lam)       # (d, N, N)
+    deg_xx = jnp.sum(wxx_ii, axis=-1).T             # (N, d)
+    diag = 4.0 * deg_w[:, None] + 8.0 * deg_xx
+    lqx = lq_matmul(X, aff, kind, lam)
+    if lqx is not None:
+        diag = diag - 16.0 * lam * lqx * lqx
+    return diag
+
+
+def full_hessian(X: Array, aff: Affinities, kind: str, lam) -> Array:
+    """Assembled dense Hessian (N*d, N*d) per eqs. (2)-(3). Test oracle —
+    verified against jax.hessian(direct_energy) at small N."""
+    n, d = X.shape
+    w = gradient_weights(X, aff, kind, lam)
+    c, _ = _pair_quantities(X, aff, kind, lam)
+    diff = X.T[:, :, None] - X.T[:, None, :]        # (d, N, N)
+
+    H = jnp.zeros((n, d, n, d), dtype=X.dtype)
+    Lw = _lap(w)
+    for i in range(d):
+        H = H.at[:, i, :, i].add(4.0 * Lw)
+        for j in range(d):
+            wxx_ij = c * diff[i] * diff[j]
+            H = H.at[:, i, :, j].add(8.0 * _lap(wxx_ij))
+    lqx = lq_matmul(X, aff, kind, lam)
+    if lqx is not None:
+        u = lqx.reshape(-1)
+        H = H.reshape(n * d, n * d) - 16.0 * lam * jnp.outer(u, u)
+        return H
+    return H.reshape(n * d, n * d)

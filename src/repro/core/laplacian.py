@@ -1,0 +1,81 @@
+"""Graph-Laplacian utilities (paper §1).
+
+Given a symmetric nonnegative weight matrix W (zero diagonal), its graph
+Laplacian is L = D - W with D = diag(W @ 1).  L is psd for nonnegative W:
+u^T L u = 1/2 sum_nm w_nm (u_n - u_m)^2 >= 0.
+
+Everything here operates on dense (N, N) arrays; "sparsity" in the paper's
+sense (kappa-nearest-neighbour graphs) is represented by exact zeros, which
+is the TPU-native representation (see DESIGN.md §3.2).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def zero_diagonal(W: Array) -> Array:
+    n = W.shape[-1]
+    return W * (1.0 - jnp.eye(n, dtype=W.dtype))
+
+
+def degree(W: Array) -> Array:
+    """Degree vector d_n = sum_m w_nm."""
+    return jnp.sum(W, axis=-1)
+
+
+def laplacian(W: Array) -> Array:
+    """Dense graph Laplacian L = D - W."""
+    return jnp.diag(degree(W)) - W
+
+
+def laplacian_matmul(W: Array, X: Array) -> Array:
+    """L(W) @ X without forming L: D X - W X.  X is (N, d)."""
+    return degree(W)[:, None] * X - W @ X
+
+
+def symmetrize(W: Array, mode: str = "avg") -> Array:
+    """Make W symmetric; `avg` (paper default) or `max` (kNN graphs)."""
+    if mode == "avg":
+        return 0.5 * (W + W.T)
+    if mode == "max":
+        return jnp.maximum(W, W.T)
+    raise ValueError(f"unknown symmetrize mode {mode!r}")
+
+
+def knn_sparsify(W: Array, kappa: int, sym: str = "max") -> Array:
+    """Keep the kappa largest entries per row of W (the paper's kappa knob).
+
+    kappa >= N-1 returns W unchanged (kappa = N in the paper's notation);
+    kappa = 0 keeps nothing off-diagonal, so L(sparsify(W,0)) has only the
+    original degrees if the caller preserves them — we instead define it the
+    way the paper uses it: B built from the kappa-sparsified W *plus the full
+    degree*, so kappa=0 yields B = D+ (the FP method).  See
+    `sparsified_attractive_matrix`.
+    """
+    n = W.shape[-1]
+    if kappa >= n - 1:
+        return W
+    if kappa <= 0:
+        return jnp.zeros_like(W)
+    # Threshold per row at the kappa-th largest off-diagonal value.
+    thresh = -jnp.sort(-W, axis=-1)[:, kappa - 1]  # (N,)
+    Wk = jnp.where(W >= thresh[:, None], W, 0.0)
+    return zero_diagonal(symmetrize(Wk, sym))
+
+
+def sparsified_attractive_matrix(Wp: Array, kappa: int) -> Array:
+    """The paper's SD family over kappa: B ~ D+ - sparsify(W+, kappa).
+
+    The degree D+ is always that of the *full* W+, so:
+      kappa = N  -> full L+        (pure spectral direction)
+      kappa = 0  -> D+             (diagonal fixed-point method, FP)
+    Intermediate kappa trades preconditioner quality for factorization cost.
+    The result is psd: it is L(W_kappa) + diag(residual degrees >= 0).
+    """
+    d_full = degree(Wp)
+    Wk = knn_sparsify(Wp, kappa)
+    # clip: `max` symmetrization may add mass; keep the matrix diag-dominant.
+    resid = jnp.maximum(d_full - degree(Wk), 0.0)
+    return jnp.diag(degree(Wk) + resid) - Wk

@@ -1,0 +1,72 @@
+"""Backtracking line search (first Wolfe / Armijo condition), paper §3.
+
+The paper uses backtracking from an initial step that is either the natural
+alpha = 1 (quasi-Newton convention) or — the paper's adaptive strategy for
+SD-type methods — the step accepted at the previous iteration.  The whole
+search runs inside one XLA program via lax.while_loop so an optimizer step
+has no host round-trips.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+class LSConfig(NamedTuple):
+    c1: float = 1e-4            # Armijo sufficient-decrease constant
+    rho: float = 0.5            # backtracking factor
+    max_backtracks: int = 30
+    # Initial trial step policy (paper §3):
+    #   'one'           always try the natural alpha = 1 (default)
+    #   'adaptive'      previous accepted step (paper's conservative scheme
+    #                   for methods whose steps settle below 1, e.g. SD)
+    #   'adaptive_grow' previous step / rho, capped at 1 (beyond-paper: lets
+    #                   the step recover after a transient backtrack)
+    init_step: str = "one"
+    # Trust cap on the first trial displacement: alpha0 is clamped so that
+    # rms(alpha0 * P) <= max_rel_move * (rms(X - mean(X)) + 1e-3).  Guards
+    # against the 1/mu amplification of near-null modes of B on disconnected
+    # affinity graphs (DESIGN.md §7).  None disables.
+    max_rel_move: float | None = 10.0
+
+
+class LSResult(NamedTuple):
+    alpha: Array      # accepted step
+    e_new: Array      # E(x + alpha p)
+    n_evals: Array    # number of energy evaluations
+    success: Array    # Armijo satisfied (else: alpha hit the backtrack cap)
+
+
+def backtracking(
+    energy_fn: Callable[[Array], Array],
+    X: Array,
+    e0: Array,
+    G: Array,
+    P: Array,
+    alpha0: Array,
+    cfg: LSConfig = LSConfig(),
+) -> LSResult:
+    """Find alpha with E(X + alpha P) <= E(X) + c1 alpha <G, P>."""
+    gtp = jnp.vdot(G, P)
+
+    def cond(carry):
+        alpha, e_new, k, _ = carry
+        armijo = e_new <= e0 + cfg.c1 * alpha * gtp
+        return jnp.logical_and(~armijo, k < cfg.max_backtracks)
+
+    def body(carry):
+        alpha, _, k, _ = carry
+        alpha = alpha * cfg.rho
+        e_new = energy_fn(X + alpha * P)
+        return alpha, e_new, k + 1, e_new <= e0 + cfg.c1 * alpha * gtp
+
+    e_first = energy_fn(X + alpha0 * P)
+    ok_first = e_first <= e0 + cfg.c1 * alpha0 * gtp
+    alpha, e_new, k, ok = jax.lax.while_loop(
+        cond, body, (alpha0, e_first, jnp.asarray(1), ok_first)
+    )
+    return LSResult(alpha=alpha, e_new=e_new, n_evals=k, success=ok)

@@ -1,0 +1,136 @@
+"""The optimizer driver: direction -> backtracking line search -> iterate.
+
+One jitted XLA program per (strategy, kind, line-search config, shapes); the
+Python loop around it only does trace bookkeeping and convergence checks, so
+wall-clock comparisons across strategies are apples-to-apples (as in the
+paper's figures, which plot E vs runtime and vs iterations).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .affinities import Affinities
+from .linesearch import LSConfig, backtracking
+from .objectives import energy, energy_and_grad
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass
+class MinimizeResult:
+    X: Array
+    energies: np.ndarray      # E_k, k = 0..n_iters (includes E_0)
+    grad_norms: np.ndarray
+    step_sizes: np.ndarray
+    times: np.ndarray         # cumulative wall-clock seconds at each iterate
+    n_fevals: np.ndarray      # cumulative energy evaluations
+    n_iters: int
+    converged: bool
+    setup_time: float         # strategy init (e.g. Cholesky factorization)
+    strategy_state: Any = None
+
+
+@functools.partial(
+    jax.jit, static_argnames=("strategy", "kind", "ls_cfg")
+)
+def _step(strategy, kind, ls_cfg: LSConfig, X, E, G, state, alpha_prev,
+          Wp, Wm, lam):
+    aff = Affinities(Wp, Wm)
+    P, state = strategy.direction(state, X, G, aff, kind, lam)
+    if ls_cfg.init_step == "adaptive":
+        alpha0 = alpha_prev
+    elif ls_cfg.init_step == "adaptive_grow":
+        alpha0 = jnp.minimum(alpha_prev / ls_cfg.rho, 1.0)
+    else:
+        alpha0 = jnp.ones_like(alpha_prev)
+    if ls_cfg.max_rel_move is not None:
+        xc = X - jnp.mean(X, axis=0, keepdims=True)
+        scale = jnp.sqrt(jnp.mean(xc * xc)) + 1e-3
+        p_rms = jnp.sqrt(jnp.mean(P * P)) + 1e-30
+        alpha0 = jnp.minimum(alpha0, ls_cfg.max_rel_move * scale / p_rms)
+    ls = backtracking(
+        lambda Xn: energy(Xn, aff, kind, lam), X, E, G, P, alpha0, ls_cfg
+    )
+    X_new = X + ls.alpha * P
+    E_new, G_new = energy_and_grad(X_new, aff, kind, lam)
+    return X_new, E_new, G_new, state, ls.alpha, ls.n_evals + 1
+
+
+def minimize(
+    X0: Array,
+    aff: Affinities,
+    kind: str,
+    lam,
+    strategy,
+    max_iters: int = 500,
+    tol: float = 1e-7,
+    ls_cfg: LSConfig = LSConfig(),
+    callback: Callable[[int, Array, float], None] | None = None,
+    max_seconds: float | None = None,
+) -> MinimizeResult:
+    """Minimize E(X; lam) with the given search-direction strategy.
+
+    Stops on relative energy decrease < tol, on max_iters, or (for the
+    paper's fixed-budget comparisons) on max_seconds of wall-clock.
+    """
+    lam = jnp.asarray(lam, dtype=X0.dtype)
+    t0 = time.perf_counter()
+    state = strategy.init(X0, aff, kind, lam)
+    state = jax.block_until_ready(state)
+    setup_time = time.perf_counter() - t0
+
+    E, G = jax.block_until_ready(
+        energy_and_grad(X0, aff, kind, lam)
+    )
+    X = X0
+    alpha = jnp.asarray(1.0, dtype=X0.dtype)
+
+    energies = [float(E)]
+    gnorms = [float(jnp.linalg.norm(G))]
+    steps: list[float] = []
+    times = [0.0]
+    fevals = [1]
+
+    converged = False
+    t_loop = time.perf_counter()
+    it = 0
+    for it in range(1, max_iters + 1):
+        X, E_new, G, state, alpha, ne = jax.block_until_ready(
+            _step(strategy, kind, ls_cfg, X, E, G, state, alpha,
+                  aff.Wp, aff.Wm, lam)
+        )
+        now = time.perf_counter() - t_loop
+        energies.append(float(E_new))
+        gnorms.append(float(jnp.linalg.norm(G)))
+        steps.append(float(alpha))
+        times.append(now)
+        fevals.append(fevals[-1] + int(ne))
+        if callback is not None:
+            callback(it, X, float(E_new))
+        rel = abs(energies[-2] - energies[-1]) / max(abs(energies[-1]), 1e-30)
+        if rel < tol:
+            converged = True
+            break
+        E = E_new
+        if max_seconds is not None and now > max_seconds:
+            break
+
+    return MinimizeResult(
+        X=X,
+        energies=np.asarray(energies),
+        grad_norms=np.asarray(gnorms),
+        step_sizes=np.asarray(steps),
+        times=np.asarray(times),
+        n_fevals=np.asarray(fevals),
+        n_iters=it,
+        converged=converged,
+        setup_time=setup_time,
+        strategy_state=state,
+    )

@@ -1,0 +1,124 @@
+"""The generic embedding objective E(X; lam) = E+(X) + lam * E-(X) (paper §1).
+
+Supported model families (`kind`):
+
+  'ee'    elastic embedding       (unnormalized, Gaussian kernel)
+  'ssne'  symmetric SNE           (normalized,   Gaussian kernel)
+  'tsne'  t-SNE                   (normalized,   Student-t kernel)
+  'tee'   t-EE                    (unnormalized, Student-t kernel — the
+                                   paper's "previously unexplored" example)
+  'epan'  Epanechnikov EE         (unnormalized, Epanechnikov kernel — ditto)
+
+Gradients are computed in the paper's Laplacian form, grad = 4 L(w) X,
+through the fused pairwise contract (kernels/ops.py):
+
+  unnormalized:  E = e_plus + lam*s          grad = 4 (L(a)X - lam   * L(b)X)
+  normalized:    E = e_plus + lam*log(s)     grad = 4 (L(a)X - lam/s * L(b)X)
+
+`direct_energy` is the textbook (non-Laplacian) form used only to verify the
+analytic gradient against jax.grad in tests.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.ref import KINDS, PairwiseTerms
+
+from .affinities import Affinities, sq_distances
+
+Array = jnp.ndarray
+
+NORMALIZED = frozenset({"ssne", "tsne"})
+UNNORMALIZED = frozenset(k for k in KINDS if k not in NORMALIZED)
+
+
+def is_normalized(kind: str) -> bool:
+    if kind not in KINDS:
+        raise ValueError(f"unknown kind {kind!r}")
+    return kind in NORMALIZED
+
+
+def _combine(terms: PairwiseTerms, kind: str, lam) -> tuple[Array, Array]:
+    if is_normalized(kind):
+        e = terms.e_plus + lam * jnp.log(terms.s)
+        g = 4.0 * (terms.la_x - (lam / terms.s) * terms.lb_x)
+    else:
+        e = terms.e_plus + lam * terms.s
+        g = 4.0 * (terms.la_x - lam * terms.lb_x)
+    return e, g
+
+
+def energy_and_grad(
+    X: Array, aff: Affinities, kind: str, lam, **impl: Any
+) -> tuple[Array, Array]:
+    terms = ops.pairwise_terms(X, aff.Wp, aff.Wm, kind, **impl)
+    return _combine(terms, kind, lam)
+
+
+def energy(X: Array, aff: Affinities, kind: str, lam, **impl: Any) -> Array:
+    return energy_and_grad(X, aff, kind, lam, **impl)[0]
+
+
+def grad(X: Array, aff: Affinities, kind: str, lam, **impl: Any) -> Array:
+    return energy_and_grad(X, aff, kind, lam, **impl)[1]
+
+
+def direct_energy(X: Array, aff: Affinities, kind: str, lam) -> Array:
+    """Textbook dense form of E (for autodiff verification only)."""
+    t = sq_distances(X)
+    Wp, Wm = aff.Wp, aff.Wm
+    if kind == "ee":
+        return jnp.sum(Wp * t) + lam * jnp.sum(Wm * jnp.exp(-t))
+    if kind == "ssne":
+        s = jnp.sum(Wm * jnp.exp(-t))
+        return jnp.sum(Wp * t) + lam * jnp.log(s)
+    if kind == "tsne":
+        K = 1.0 / (1.0 + t)
+        s = jnp.sum(Wm * K)
+        return jnp.sum(Wp * jnp.log1p(t)) + lam * jnp.log(s)
+    if kind == "tee":
+        K = 1.0 / (1.0 + t)
+        return jnp.sum(Wp * t) + lam * jnp.sum(Wm * K)
+    if kind == "epan":
+        return jnp.sum(Wp * t) + lam * jnp.sum(Wm * jnp.maximum(1.0 - t, 0.0))
+    raise ValueError(f"unknown kind {kind!r}")
+
+
+def gradient_weights(X: Array, aff: Affinities, kind: str, lam) -> Array:
+    """Dense gradient-Laplacian weights w so that grad = 4 L(w) X (paper eqs.
+    (2)-(3)).  Used by Hessian-based strategies and tests; O(N^2) memory."""
+    t = sq_distances(X)
+    Wp, Wm = aff.Wp, aff.Wm
+    if kind == "ee":
+        return Wp - lam * Wm * jnp.exp(-t)
+    if kind == "ssne":
+        G = Wm * jnp.exp(-t)
+        Q = G / jnp.sum(G)
+        return Wp - lam * Q
+    if kind == "tsne":
+        K = 1.0 / (1.0 + t)
+        KW = Wm * K
+        Q = KW / jnp.sum(KW)
+        return (Wp - lam * Q) * K
+    if kind == "tee":
+        K = 1.0 / (1.0 + t)
+        return Wp - lam * Wm * K * K
+    if kind == "epan":
+        return Wp - lam * Wm * (t < 1.0).astype(X.dtype)
+    raise ValueError(f"unknown kind {kind!r}")
+
+
+def attractive_weights(aff: Affinities, kind: str) -> Array:
+    """Weights of the attractive (spectral) Hessian 4 L+ (x) I_d.
+
+    For EE / s-SNE the attractive Hessian is exactly 4 L(W+) and constant.
+    For t-SNE it is X-dependent; per the paper we freeze it at X = 0, where
+    -K1(0) = 1, giving the same L(P) — this is what makes the cached Cholesky
+    factor valid for t-SNE too.  (Same argument for t-EE / Epanechnikov.)
+    """
+    if kind not in KINDS:
+        raise ValueError(f"unknown kind {kind!r}")
+    return aff.Wp

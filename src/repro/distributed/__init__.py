@@ -1,0 +1,5 @@
+from .sharding import (batch_shardings, fsdp_axes, opt_state_shardings,
+                       scalar_sharding, spec_for, tree_shardings)
+
+__all__ = ["batch_shardings", "fsdp_axes", "opt_state_shardings",
+           "scalar_sharding", "spec_for", "tree_shardings"]

@@ -1,0 +1,173 @@
+"""Logical-axis -> mesh-axis sharding rules (DESIGN.md §5).
+
+Parameters/caches carry LOGICAL axis names (models/layers.py init functions);
+this module maps them onto a concrete mesh:
+
+  embed            -> FSDP axes ("pod","data" when present, else "data")
+  mlp / q_heads / kv_heads / vocab / experts / ssm_proj / ssm_heads -> "model"
+  layers / scalars -> unsharded
+
+A dim is only sharded if its size is divisible by the mesh axis size and the
+axis is not already used by an earlier dim of the same tensor — this is what
+lets all ten exact published configs (head counts 24/28/40/56, 8-expert MoE
+on a 16-way model axis, batch=1 long-context) compile on the same mesh
+without padding (`maybe_shard`).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# candidate mesh axes per logical axis, in priority order; "fsdp" expands
+RULES: dict[str | None, tuple[str, ...]] = {
+    "embed": ("fsdp",),
+    "embed_act": ("model",),
+    "mlp": ("model",),
+    "q_heads": ("model",),
+    "kv_heads": ("model",),
+    "kv_seq": ("model",),   # fallback: sequence-sharded KV cache (below)
+    "vocab": ("model",),
+    "experts": ("model",),
+    "experts_r": ("model",),
+    "ssm_proj": ("model",),
+    "ssm_heads": ("model",),
+    "codebooks": (),
+    "layers": (),
+    "batch": ("fsdp",),
+    None: (),
+}
+
+# assignment order within one tensor: kv_heads gets first claim on the
+# model axis; kv_seq only takes it when the head count doesn't divide
+# (sequence-parallel decode attention — GSPMD turns the softmax reduction
+# over the sharded KV length into a psum).  §Perf decode iteration.
+_PRIORITY: dict[str | None, int] = {"kv_heads": 0, "experts": 0,
+                                    "kv_seq": 2}
+
+
+def fsdp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axis: str | tuple[str, ...]) -> int:
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def spec_for(mesh: Mesh, logical: tuple, shape: tuple) -> P:
+    """PartitionSpec for one tensor given its logical axes and shape.
+    Dims are assigned in _PRIORITY order (not positional order), so
+    fallback axes only claim a mesh axis the primary owner couldn't use."""
+    used: set[str] = set()
+    out: list = [None] * len(logical)
+    order = sorted(range(len(logical)),
+                   key=lambda i: (_PRIORITY.get(logical[i], 1), i))
+    for i in order:
+        dim, name = shape[i], logical[i]
+        cands = RULES.get(name, ())
+        for cand in cands:
+            mesh_axis: str | tuple[str, ...]
+            mesh_axis = fsdp_axes(mesh) if cand == "fsdp" else cand
+            if not mesh_axis:
+                continue
+            flat = mesh_axis if isinstance(mesh_axis, tuple) else (mesh_axis,)
+            if any(a in used or a not in mesh.axis_names for a in flat):
+                continue
+            if dim % _axis_size(mesh, mesh_axis) != 0:
+                continue
+            out[i] = mesh_axis
+            used.update(flat)
+            break
+    return P(*out)
+
+
+def tree_shardings(mesh: Mesh, axes_tree: Any, shape_tree: Any) -> Any:
+    """NamedSharding pytree matching `shape_tree` (arrays or SDS)."""
+    is_axes_leaf = lambda x: isinstance(x, tuple)
+    flat_axes = jax.tree.leaves(axes_tree, is_leaf=is_axes_leaf)
+    flat_shapes, tdef = jax.tree.flatten(shape_tree)
+    assert len(flat_axes) == len(flat_shapes), (
+        len(flat_axes), len(flat_shapes))
+    out = [NamedSharding(mesh, spec_for(mesh, ax, np.shape(s) if not
+                                        hasattr(s, "shape") else s.shape))
+           for ax, s in zip(flat_axes, flat_shapes)]
+    return jax.tree.unflatten(tdef, out)
+
+
+def batch_shardings(mesh: Mesh, batch_tree: Any) -> Any:
+    """Shard the leading (batch) dim over the FSDP axes where divisible."""
+    fa = fsdp_axes(mesh)
+    size = _axis_size(mesh, fa) if fa else 1
+
+    def one(x):
+        shape = x.shape if hasattr(x, "shape") else np.shape(x)
+        if fa and shape and shape[0] % size == 0:
+            return NamedSharding(mesh, P(fa))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, batch_tree)
+
+
+def scalar_sharding(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def opt_state_shardings(mesh: Mesh, axes_tree: Any, params_shapes: Any) -> Any:
+    """Adam m/v share the parameter sharding; count is replicated."""
+    ps = tree_shardings(mesh, axes_tree, params_shapes)
+    return {"m": ps, "v": ps, "count": scalar_sharding(mesh)}
+
+
+def make_activation_constraint(mesh: Mesh, run=None):
+    """Constraint hook for the residual stream / QKV activations
+    (models/hooks.py).  Shards the leading batch dim over the FSDP axes and,
+    where divisible, heads (qkv) or d_model (residual, when
+    run.act_shard_embed) over "model".  This is what keeps the data axis
+    busy inside the layer scan — without it GSPMD drops batch sharding at
+    the first head-count reshape that does not divide (DESIGN.md §5)."""
+    import jax.numpy as jnp
+
+    fa = fsdp_axes(mesh)
+    fsize = _axis_size(mesh, fa) if fa else 1
+    msize = mesh.shape.get("model", 1)
+    shard_embed = bool(run and getattr(run, "act_shard_embed", False))
+
+    def fn(x, tag):
+        if not hasattr(x, "ndim") or x.ndim < 2:
+            return x
+        spec: list = [None] * x.ndim
+        if fa and x.shape[0] % fsize == 0:
+            spec[0] = fa
+        if tag == "qkv" and x.ndim == 4 and "model" in mesh.axis_names \
+                and x.shape[2] % msize == 0:
+            spec[2] = "model"
+        if tag == "residual" and shard_embed and "model" in mesh.axis_names \
+                and x.shape[-1] % msize == 0:
+            spec[-1] = "model"
+        if tag == "moe_dispatch" and x.ndim == 4 \
+                and "model" in mesh.axis_names:
+            # (B, S, E, C): experts over model (EP); if the expert count
+            # does not divide (grok: 8 experts, 16-way model axis), shard
+            # the capacity dim instead — either way the O(B S (S k cf) D)
+            # dispatch einsums stop running with the model axis idle
+            if x.shape[2] % msize == 0:
+                spec[2] = "model"
+            elif x.shape[3] % msize == 0:
+                spec[3] = "model"
+        if tag == "moe_expert" and x.ndim == 4 \
+                and "model" in mesh.axis_names:
+            spec = [None] * 4   # (E, B, C, D)
+            if x.shape[0] % msize == 0:
+                spec[0] = "model"
+            elif x.shape[2] % msize == 0:
+                spec[2] = "model"
+            if fa and x.shape[1] % fsize == 0:
+                spec[1] = fa
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*spec)))
+
+    return fn

@@ -1,0 +1,16 @@
+from .distributed import (
+    EmbedMeshSpec,
+    make_block_jacobi_setup,
+    make_block_jacobi_solve,
+    make_distributed_energy_grad,
+    replicate,
+    shard_pairwise,
+    shard_rows,
+)
+from .trainer import DistributedEmbedding, EmbedConfig, FitResult
+
+__all__ = [
+    "EmbedMeshSpec", "make_block_jacobi_setup", "make_block_jacobi_solve",
+    "make_distributed_energy_grad", "replicate", "shard_pairwise",
+    "shard_rows", "DistributedEmbedding", "EmbedConfig", "FitResult",
+]

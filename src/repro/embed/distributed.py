@@ -1,0 +1,246 @@
+"""Distributed embedding runtime: 2-D decomposition of the O(N^2 d) pairwise
+work + distributed spectral-direction solves (DESIGN.md §3.4, §5).
+
+Layout on a mesh with row axes (e.g. ("pod", "data")) and a column axis
+("model"):
+
+  * X (N, d) is replicated — it is tiny (d = 2-3) and every tile needs both
+    a row-slice and a column-slice of it.
+  * Wp / Wm (N, N) are 2-D sharded: rows over the row axes, columns over the
+    column axis.  This is the only O(N^2) state.
+  * each device computes its (row-block x col-block) tile of the virtual
+    pairwise interaction: one matmul + VPU kernel math (on TPU the inner
+    tile goes through the Pallas kernel; on CPU the jnp oracle).
+  * row-block gradient contributions are psum'd over "model" only; the
+    scalars (e_plus, s) over every axis.  Comm per step: O(N d / P_row)
+    + two scalars — negligible against the O(N^2 d / P) compute.
+
+Spectral-direction solves:
+
+  * `replicated`: the Cholesky factor of B = 4 L+ + mu I is replicated and
+    each row-group backsolves its rows (paper-faithful; N <= ~3e4).
+  * `block_jacobi`: each row-block factors only its local diagonal block of
+    B — zero-communication backsolves, B stays pd block-diagonal, so the
+    direction is still a descent direction and Thm 2.1 still applies
+    (beyond-paper, scales to N >> 1e5).  The diagonal block of a 2-D-sharded
+    W+ is fetched with a masked psum over "model" at setup (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.objectives import is_normalized
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbedMeshSpec:
+    """Axis naming for the embedding decomposition."""
+    row_axes: tuple[str, ...] = ("data",)
+    col_axis: str = "model"
+
+    @property
+    def all_axes(self) -> tuple[str, ...]:
+        return self.row_axes + (self.col_axis,)
+
+
+def _row_index(spec: EmbedMeshSpec) -> Array:
+    """Linear row-block index of this device across the row axes."""
+    idx = jnp.asarray(0, jnp.int32)
+    for ax in spec.row_axes:
+        idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+    return idx
+
+
+def _row_groups(mesh: Mesh, spec: EmbedMeshSpec) -> int:
+    g = 1
+    for ax in spec.row_axes:
+        g *= mesh.shape[ax]
+    return g
+
+
+def _tile_terms_local(kind: str, xi, xj, wa, wb, diag_tile):
+    """Local tile of the unified pairwise contract (ref.py) — shard_map body.
+
+    wb=None means W- == 1 off-diagonal (EE with unit repulsion weights and
+    all normalized models): the repulsive weights are then a pure function
+    of the distances and need NO O(N^2) storage — this halves (with bf16
+    Wp: quarters) the memory-bound pairwise traffic (EXPERIMENTS.md §Perf,
+    embedding iter 1).  The diagonal's spurious K(0) contribution is
+    removed from the scalar s via `diag_tile` (b's Laplacian product is
+    immune: w_nn (x_n - x_n) = 0).
+    """
+    f32 = jnp.float32
+    wa = wa.astype(f32)
+    xi, xj = xi.astype(f32), xj.astype(f32)
+    ri = jnp.sum(xi * xi, axis=-1, keepdims=True)
+    rj = jnp.sum(xj * xj, axis=-1, keepdims=True)
+    t = jnp.maximum(ri + rj.T - 2.0 * (xi @ xj.T), 0.0)
+    if wb is None:
+        # traced count of diagonal elements present in this tile
+        diag_n = xi.shape[0] * diag_tile.astype(f32)
+    else:
+        wb = wb.astype(f32)
+        diag_n = jnp.asarray(0.0, f32)
+    if kind in ("ee", "ssne"):
+        a = wa
+        b = jnp.exp(-t) if wb is None else wb * jnp.exp(-t)
+        ep, s = jnp.sum(wa * t), jnp.sum(b) - diag_n  # K(0)=1 per diag elem
+    elif kind == "tsne":
+        K = 1.0 / (1.0 + t)
+        a = wa * K
+        b = K * K if wb is None else wb * K * K
+        kk = K if wb is None else wb * K
+        ep, s = jnp.sum(wa * jnp.log1p(t)), jnp.sum(kk) - diag_n
+    elif kind == "tee":
+        K = 1.0 / (1.0 + t)
+        a = wa
+        b = K * K if wb is None else wb * K * K
+        kk = K if wb is None else wb * K
+        ep, s = jnp.sum(wa * t), jnp.sum(kk) - diag_n
+    elif kind == "epan":
+        supp = (t < 1.0).astype(t.dtype)
+        a = wa
+        b = supp if wb is None else wb * supp
+        kk = jnp.maximum(1.0 - t, 0.0)
+        kk = kk if wb is None else wb * kk
+        ep, s = jnp.sum(wa * t), jnp.sum(kk) - diag_n
+    else:
+        raise ValueError(kind)
+    la = jnp.sum(a, axis=1, keepdims=True) * xi - a @ xj
+    lb = jnp.sum(b, axis=1, keepdims=True) * xi - b @ xj
+    return la, lb, ep, s
+
+
+def make_distributed_energy_grad(mesh: Mesh, spec: EmbedMeshSpec, kind: str,
+                                 unit_wm: bool = False):
+    """Returns jit'd (X, Wp, Wm, lam) -> (E, G) with G row-sharded —
+    or (X, Wp, lam) -> (E, G) when unit_wm (W- == 1 off-diagonal: repulsive
+    weights recomputed from distances, zero O(N^2) storage).
+
+    X replicated; Wp/Wm 2-D sharded P(row_axes, col_axis).
+    """
+    n_row_groups = _row_groups(mesh, spec)
+    n_col_groups = mesh.shape[spec.col_axis]
+
+    def core(X, Wp, Wm, lam):
+        r = _row_index(spec)
+        c = jax.lax.axis_index(spec.col_axis)
+        n = X.shape[0]
+        nb_r = n // n_row_groups
+        nb_c = n // n_col_groups
+        xi = jax.lax.dynamic_slice_in_dim(X, r * nb_r, nb_r, 0)
+        xj = jax.lax.dynamic_slice_in_dim(X, c * nb_c, nb_c, 0)
+        # does this tile contain the diagonal? (row range is always fully
+        # inside exactly one col block since nb_r <= nb_c divides evenly)
+        diag_tile = c == (r * n_col_groups) // n_row_groups
+        la, lb, ep, s = _tile_terms_local(kind, xi, xj, Wp, Wm, diag_tile)
+        la = jax.lax.psum(la, spec.col_axis)
+        lb = jax.lax.psum(lb, spec.col_axis)
+        ep = jax.lax.psum(ep, spec.all_axes)
+        s = jax.lax.psum(s, spec.all_axes)
+        if is_normalized(kind):
+            E = ep + lam * jnp.log(s)
+            G = 4.0 * (la - (lam / s) * lb)
+        else:
+            E = ep + lam * s
+            G = 4.0 * (la - lam * lb)
+        return E, G
+
+    w_spec = P(spec.row_axes, spec.col_axis)
+    if unit_wm:
+        f = jax.shard_map(
+            lambda X, Wp, lam: core(X, Wp, None, lam), mesh=mesh,
+            in_specs=(P(), w_spec, P()),
+            out_specs=(P(), P(spec.row_axes, None)),
+        )
+    else:
+        f = jax.shard_map(
+            core, mesh=mesh,
+            in_specs=(P(), w_spec, w_spec, P()),
+            out_specs=(P(), P(spec.row_axes, None)),
+        )
+    return jax.jit(f)
+
+
+def make_block_jacobi_setup(mesh: Mesh, spec: EmbedMeshSpec,
+                            mu_scale: float = 1e-5):
+    """Returns jit'd (Wp,) -> R_blocks with R_blocks row-sharded (N, Nb):
+    the Cholesky factor of each row-group's diagonal block of
+    B = 4 (D+ - W+) + mu I, computed without materializing B globally."""
+    n_row_groups = _row_groups(mesh, spec)
+    n_col_groups = mesh.shape[spec.col_axis]
+
+    def body(Wp):
+        r = _row_index(spec)
+        c = jax.lax.axis_index(spec.col_axis)
+        nb_r, n_loc_c = Wp.shape  # local rows x local cols
+        # full degrees for my rows: sum over the column axis
+        deg = jax.lax.psum(jnp.sum(Wp, axis=1), spec.col_axis)   # (nb_r,)
+        # extract my diagonal block W+[rows_r, rows_r]: its global column
+        # range [r*nb_r, (r+1)*nb_r) intersected with my local columns
+        col0 = c * n_loc_c
+        start = jnp.clip(r * nb_r - col0, 0, n_loc_c)
+        # number of my columns that fall in the diag range
+        width = jnp.clip(jnp.minimum((r + 1) * nb_r, col0 + n_loc_c)
+                         - jnp.maximum(r * nb_r, col0), 0, nb_r)
+        # gather a fixed-size window then mask (shard_map needs static shapes)
+        take = min(nb_r, n_loc_c)
+        win = jax.lax.dynamic_slice_in_dim(Wp, start, take, 1)   # (nb_r, take)
+        # place into (nb_r, nb_r) at offset (my cols' global start - r*nb_r)
+        dst = jnp.clip(col0 + start - r * nb_r, 0, nb_r)
+        block = jnp.zeros((nb_r, nb_r), Wp.dtype)
+        block = jax.lax.dynamic_update_slice_in_dim(block, win, dst, 1)
+        cols = jnp.arange(nb_r)
+        mask = (cols[None, :] >= dst) & (cols[None, :] < dst + width)
+        block = jnp.where(mask, block, 0.0)
+        # every column of the diag range is owned by exactly one model shard
+        block = jax.lax.psum(block, spec.col_axis)               # (nb_r, nb_r)
+        B = 4.0 * (jnp.diag(deg) - block)
+        bd = jnp.diag(B)
+        mu = jnp.maximum(1e-10 * jnp.min(bd), mu_scale * jnp.mean(bd))
+        B = B + mu * jnp.eye(nb_r, dtype=B.dtype)
+        return jnp.linalg.cholesky(B)
+
+    w_spec = P(spec.row_axes, spec.col_axis)
+    f = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(w_spec,),
+        out_specs=P(spec.row_axes, None),
+    )
+    return jax.jit(f)
+
+
+def make_block_jacobi_solve(mesh: Mesh, spec: EmbedMeshSpec):
+    """(R_blocks, G) -> P = -B^{-1} G, both row-sharded. Zero communication."""
+
+    def body(R, G):
+        return -jsl.cho_solve((R, True), G)
+
+    f = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(spec.row_axes, None), P(spec.row_axes, None)),
+        out_specs=P(spec.row_axes, None),
+    )
+    return jax.jit(f)
+
+
+def shard_pairwise(mesh: Mesh, spec: EmbedMeshSpec, W: Array) -> Array:
+    """Place an (N, N) weight matrix with the 2-D sharding."""
+    return jax.device_put(W, NamedSharding(mesh, P(spec.row_axes, spec.col_axis)))
+
+
+def shard_rows(mesh: Mesh, spec: EmbedMeshSpec, X: Array) -> Array:
+    return jax.device_put(X, NamedSharding(mesh, P(spec.row_axes, None)))
+
+
+def replicate(mesh: Mesh, X: Array) -> Array:
+    return jax.device_put(X, NamedSharding(mesh, P()))

@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the paper's O(N^2 d) pairwise hot spot, with
+# pure-jnp oracles (ref.py) and jit'd dispatch wrappers (ops.py).
+from . import ops, ref
+from .ref import KINDS, PairwiseTerms
+
+__all__ = ["ops", "ref", "KINDS", "PairwiseTerms"]

@@ -1,0 +1,78 @@
+"""Jit'd dispatch wrappers around the fused pairwise kernel.
+
+`pairwise_terms` is the single entry point the rest of the framework uses.
+On TPU it runs the Pallas kernel; on CPU it defaults to the jnp oracle
+(identical contract) unless the caller forces the kernel (tests run it in
+interpret mode).  Padding logic lives here so the kernel itself can assume
+aligned shapes:
+
+  * N is padded to a multiple of the block size with zero rows — zero
+    weights mean padded pairs contribute exactly 0 to every output (padded
+    X rows sit at the origin; their a/b weights are all zero).
+  * d is padded to `lane` columns of zeros — this changes no distance and
+    no output in the first d columns.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .pairwise import pairwise_terms_pallas
+from .ref import KINDS, PairwiseTerms, pairwise_terms_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "use_pallas", "block_rows", "block_cols", "interpret", "lane"),
+)
+def pairwise_terms(
+    X: jnp.ndarray,
+    Wa: jnp.ndarray,
+    Wb: jnp.ndarray,
+    kind: str,
+    *,
+    use_pallas: bool | None = None,
+    block_rows: int = 256,
+    block_cols: int = 256,
+    interpret: bool | None = None,
+    lane: int = 128,
+) -> PairwiseTerms:
+    """Fused pairwise terms; see kernels/ref.py for the contract."""
+    if kind not in KINDS:
+        raise ValueError(f"unknown kind {kind!r}")
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return pairwise_terms_ref(X, Wa, Wb, kind)
+
+    if interpret is None:
+        interpret = not _on_tpu()
+    n, d = X.shape
+    br = min(block_rows, max(8, n))
+    bc = min(block_cols, max(8, n))
+    n_pad = -(-n // br) * br
+    n_pad = -(-n_pad // bc) * bc
+    dp = max(lane, d)
+    Xp = _pad_to(X.astype(jnp.float32), n_pad, dp)
+    Wap = _pad_to(Wa.astype(jnp.float32), n_pad, n_pad)
+    Wbp = _pad_to(Wb.astype(jnp.float32), n_pad, n_pad)
+    t = pairwise_terms_pallas(
+        Xp, Wap, Wbp, kind,
+        block_rows=br, block_cols=bc, interpret=interpret,
+    )
+    return PairwiseTerms(
+        la_x=t.la_x[:n, :d], lb_x=t.lb_x[:n, :d], e_plus=t.e_plus, s=t.s
+    )

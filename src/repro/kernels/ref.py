@@ -1,0 +1,90 @@
+"""Pure-jnp oracle for the fused pairwise embedding computation.
+
+This is the O(N^2 d) hot spot the paper identifies (§4): computing E and
+grad E requires, for every pair (n, m), the squared distance, the kernel
+value, and weighted accumulations.  The Pallas kernel (pairwise.py) computes
+the same four quantities tile-by-tile without materializing any N x N array;
+this reference materializes them densely and is the correctness oracle.
+
+Unified contract (see DESIGN.md §3.1) — for X (N, d), attractive weights Wa,
+repulsive weights Wb (both symmetric, zero diagonal):
+
+    kind      a_nm (attractive)    b_nm (repulsive)        e_plus            s
+    'ee'      Wa                   Wb * exp(-t)            sum Wa*t          sum b
+    'ssne'    Wa (=P)              Wb * exp(-t)            sum Wa*t          sum b
+    'tsne'    Wa*K                 Wb*K^2  (K=1/(1+t))     sum Wa*log(1+t)   sum Wb*K
+    'tee'     Wa                   Wb*K^2                  sum Wa*t          sum Wb*K
+    'epan'    Wa                   Wb*[t<1]                sum Wa*t          sum Wb*max(1-t,0)
+
+with t = ||x_n - x_m||^2.  Outputs:
+
+    la_x  = L(a) @ X   (attractive Laplacian product)
+    lb_x  = L(b) @ X   (repulsive-side Laplacian product)
+    e_plus, s          (scalars)
+
+The objective layer combines them (core/objectives.py):
+    unnormalized (ee/tee/epan):  E = e_plus + lam*s,        grad = 4*(la_x - lam*lb_x)
+    normalized (ssne/tsne):      E = e_plus + lam*log(s),   grad = 4*(la_x - (lam/s)*lb_x)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+KINDS = ("ee", "ssne", "tsne", "tee", "epan")
+
+
+class PairwiseTerms(NamedTuple):
+    la_x: Array   # (N, d)
+    lb_x: Array   # (N, d)
+    e_plus: Array  # scalar
+    s: Array       # scalar
+
+
+def _pairwise_sq_dists(X: Array) -> Array:
+    r = jnp.sum(X * X, axis=-1)
+    t = r[:, None] + r[None, :] - 2.0 * (X @ X.T)
+    t = jnp.maximum(t, 0.0)
+    return t * (1.0 - jnp.eye(X.shape[0], dtype=X.dtype))
+
+
+def _lap_matmul(W: Array, X: Array) -> Array:
+    return jnp.sum(W, axis=-1)[:, None] * X - W @ X
+
+
+def pairwise_terms_ref(X: Array, Wa: Array, Wb: Array, kind: str) -> PairwiseTerms:
+    if kind not in KINDS:
+        raise ValueError(f"unknown kind {kind!r}")
+    t = _pairwise_sq_dists(X)
+    if kind in ("ee", "ssne"):
+        a = Wa
+        b = Wb * jnp.exp(-t)
+        e_plus = jnp.sum(Wa * t)
+        s = jnp.sum(b)
+    elif kind == "tsne":
+        K = 1.0 / (1.0 + t)
+        a = Wa * K
+        b = Wb * K * K
+        e_plus = jnp.sum(Wa * jnp.log1p(t))
+        s = jnp.sum(Wb * K)
+    elif kind == "tee":
+        K = 1.0 / (1.0 + t)
+        a = Wa
+        b = Wb * K * K
+        e_plus = jnp.sum(Wa * t)
+        s = jnp.sum(Wb * K)
+    else:  # 'epan'
+        supp = (t < 1.0).astype(X.dtype)
+        a = Wa
+        b = Wb * supp
+        e_plus = jnp.sum(Wa * t)
+        s = jnp.sum(Wb * jnp.maximum(1.0 - t, 0.0))
+    return PairwiseTerms(
+        la_x=_lap_matmul(a, X),
+        lb_x=_lap_matmul(b, X),
+        e_plus=e_plus,
+        s=s,
+    )

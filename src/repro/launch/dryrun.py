@@ -1,0 +1,279 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST be the first two lines, before any jax import — jax locks the
+# device count on first init (assignment §MULTI-POD DRY-RUN step 0).
+
+DOC = """Multi-pod dry-run (assignment §MULTI-POD DRY-RUN).
+
+Lowers + compiles every (architecture x input-shape x mesh) cell with
+ShapeDtypeStruct inputs (no allocation), prints memory_analysis /
+cost_analysis, and appends a JSONL row per cell with the roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Rows are keyed (arch, shape, mesh, tag); existing rows are skipped, so the
+full sweep is resumable.  NOTE: the 512 forced host devices exist only in
+this process; tests and benchmarks see the real device list.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import (ARCH_IDS, EMBEDDING_ARCHS, RunConfig, SHAPES,
+                           get_config, shape_cells, skipped_cells)
+from repro.data import batch_specs
+from repro.distributed.sharding import (batch_shardings, fsdp_axes,
+                                        scalar_sharding, tree_shardings)
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh, n_chips
+from repro.models import (build_model, make_decode_step, make_prefill,
+                          make_train_step, train_state_specs, params_specs)
+from repro.optim.adamw import AdamWConfig
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun.jsonl")
+
+
+def default_run_config(shape_name: str, overrides: dict | None = None
+                       ) -> RunConfig:
+    kw = dict(num_microbatches=8, remat="full", scan_layers=True,
+              attn_q_chunk=1024, embed_onehot=True)
+    if shape_name == "prefill_32k":
+        kw.update(num_microbatches=1, attn_q_chunk=1024)
+    if shape_name in ("decode_32k", "long_500k"):
+        kw.update(num_microbatches=1, remat="none", attn_q_chunk=0)
+    if overrides:
+        kw.update(overrides)
+    return RunConfig(**kw)
+
+
+def _mem_summary(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        if ma is None:
+            return {}
+        keys = ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "alias_size_in_bytes",
+                "generated_code_size_in_bytes")
+        out = {}
+        for k in keys:
+            v = getattr(ma, k, None)
+            if v is not None:
+                out[k] = int(v)
+        return out
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def lower_cell(arch: str, shape_name: str, mesh, run_overrides=None):
+    """Returns (lowered, model_flops, tag_extras)."""
+    from repro.distributed.sharding import make_activation_constraint
+    from repro.models import hooks as model_hooks
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    run = default_run_config(shape_name, run_overrides)
+    model = build_model(cfg, run)
+    mflops = rl.model_flops_for(cfg, shape)
+    model_hooks.set_activation_constraint(
+        make_activation_constraint(mesh, run))
+
+    if shape.mode == "train":
+        state_specs, axes = train_state_specs(model)
+        state_sh = {
+            "params": tree_shardings(mesh, axes, state_specs["params"]),
+            "opt": {
+                "m": tree_shardings(mesh, axes, state_specs["opt"]["m"]),
+                "v": tree_shardings(mesh, axes, state_specs["opt"]["v"]),
+                "count": scalar_sharding(mesh),
+            },
+            "step": scalar_sharding(mesh),
+        }
+        b_specs = batch_specs(cfg, shape)
+        b_sh = batch_shardings(mesh, b_specs)
+        gs = state_sh["params"] if getattr(run, "zero_grads", True) else None
+        step = make_train_step(
+            model, AdamWConfig(moment_dtype=run.moment_dtype),
+            grad_shardings=gs)
+        lowered = jax.jit(
+            step, in_shardings=(state_sh, b_sh), donate_argnums=(0,)
+        ).lower(state_specs, b_specs)
+        return lowered, mflops
+
+    p_specs, axes = params_specs(model)
+    if run.serve_param_dtype != "float32":
+        import numpy as _np
+        sdt = _np.dtype(run.serve_param_dtype)
+        p_specs = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, sdt if s.dtype == _np.float32 else s.dtype),
+            p_specs)
+    p_sh = tree_shardings(mesh, axes, p_specs)
+    if shape.mode == "prefill":
+        b_specs = batch_specs(cfg, shape)
+        b_sh = batch_shardings(mesh, b_specs)
+        fn = make_prefill(model)
+        lowered = jax.jit(fn, in_shardings=(p_sh, b_sh)).lower(
+            p_specs, b_specs)
+        return lowered, mflops
+
+    # decode: cache filled to seq_len, one new token
+    cache_specs = jax.eval_shape(
+        lambda: model.init_caches(shape.global_batch, shape.seq_len,
+                                  mode="decode"))
+    cache_axes = model.cache_axes()
+    cache_sh = tree_shardings(mesh, cache_axes, cache_specs)
+    b_specs = batch_specs(cfg, shape)
+    tok_sh = batch_shardings(mesh, b_specs)
+    fn = make_decode_step(model)
+    lowered = jax.jit(
+        fn, in_shardings=(p_sh, cache_sh, tok_sh["tokens"]),
+        donate_argnums=(1,),
+    ).lower(p_specs, cache_specs, b_specs["tokens"])
+    return lowered, mflops
+
+
+def lower_embedding_cell(arch: str, mesh, run_overrides=None):
+    """The paper's own workload on the production mesh: one distributed
+    SD iteration (fused pairwise energy+grad, row-sharded solve).
+
+    Overrides (hillclimb knobs): {"embed_unit_wm": true} drops the O(N^2)
+    W- storage (recomputed from distances); {"embed_wp_dtype": "bfloat16"}
+    halves the W+ stream."""
+    from repro.embed import EmbedMeshSpec, make_distributed_energy_grad
+    ov = run_overrides or {}
+    unit_wm = bool(ov.get("embed_unit_wm", False))
+    wp_dtype = np.dtype(ov.get("embed_wp_dtype", "float32"))
+    cfg = get_config(arch)
+    rows = fsdp_axes(mesh)
+    spec = EmbedMeshSpec(row_axes=rows, col_axis="model")
+    row_groups = int(np.prod([mesh.shape[a] for a in rows]))
+    n = cfg.n_points
+    lcm = np.lcm(row_groups, mesh.shape["model"]) * 1
+    n = int(-(-n // lcm) * lcm)  # pad N to shardable size
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    eg = make_distributed_energy_grad(mesh, spec, cfg.kind, unit_wm=unit_wm)
+    w_sh = NamedSharding(mesh, P(rows, "model"))
+    x_sh = NamedSharding(mesh, P())
+    X = jax.ShapeDtypeStruct((n, cfg.embed_dim), np.float32)
+    W = jax.ShapeDtypeStruct((n, n), wp_dtype)
+    lam = jax.ShapeDtypeStruct((), np.float32)
+    if unit_wm:
+        lowered = jax.jit(
+            eg.__wrapped__, in_shardings=(x_sh, w_sh, x_sh)
+        ).lower(X, W, lam)
+    else:
+        lowered = jax.jit(
+            eg.__wrapped__, in_shardings=(x_sh, w_sh, w_sh, x_sh)
+        ).lower(X, W, W, lam)
+    # model flops: one fused pairwise pass = ~6 N^2 (d + kernel math)
+    mflops = 6.0 * n * n * (cfg.embed_dim + 4)
+    return lowered, mflops
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_path: str,
+             tag: str = "baseline", run_overrides=None, verbose=True):
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.perf_counter()
+    if arch in EMBEDDING_ARCHS:
+        lowered, mflops = lower_embedding_cell(arch, mesh, run_overrides)
+    else:
+        lowered, mflops = lower_cell(arch, shape_name, mesh, run_overrides)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+    roof = rl.analyze(compiled, n_chips(mesh), mflops)
+    mem = _mem_summary(compiled)
+    row = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "tag": tag,
+        "chips": int(n_chips(mesh)),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem,
+        **roof.as_dict(),
+    }
+    if verbose:
+        print(f"== {arch} x {shape_name} x {mesh_kind} [{tag}] ==")
+        print(f"  lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print(f"  memory_analysis: {mem}")
+        print(f"  cost: flops/chip={roof.flops_per_chip:.3e} "
+              f"bytes/chip={roof.bytes_per_chip:.3e} "
+              f"coll bytes/chip={roof.collective_bytes_per_chip:.3e}")
+        print(f"  terms: compute={roof.compute_s:.4f}s "
+              f"memory={roof.memory_s:.4f}s "
+              f"collective={roof.collective_s:.4f}s -> {roof.dominant}")
+        print(f"  MODEL_FLOPS={mflops:.3e} useful_ratio={roof.useful_ratio:.3f}")
+    os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)
+    with open(out_path, "a") as f:
+        f.write(json.dumps(row) + "\n")
+    return row
+
+
+def existing_keys(out_path: str) -> set:
+    keys = set()
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    keys.add((r["arch"], r["shape"], r["mesh"],
+                              r.get("tag", "baseline")))
+                except json.JSONDecodeError:
+                    continue
+    return keys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--overrides", default=None,
+                    help="JSON RunConfig overrides, e.g. "
+                         '\'{"num_microbatches": 16}\'')
+    args = ap.parse_args()
+    overrides = json.loads(args.overrides) if args.overrides else None
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.all:
+        done = existing_keys(args.out)
+        cells = []
+        for arch in ARCH_IDS:
+            for sc in shape_cells(arch):
+                for mk in meshes:
+                    cells.append((arch, sc.name, mk))
+        for arch, sname, mk in cells:
+            if (arch, sname, mk, args.tag) in done:
+                print(f"skip {arch} x {sname} x {mk} (done)")
+                continue
+            try:
+                run_cell(arch, sname, mk, args.out, tag=args.tag,
+                         run_overrides=overrides)
+            except Exception:
+                print(f"FAILED {arch} x {sname} x {mk}")
+                traceback.print_exc()
+        # record the assignment-mandated skips
+        for arch in ARCH_IDS:
+            for sc, why in skipped_cells(arch):
+                print(f"SKIP-CELL {arch} x {sc.name}: {why}")
+        return
+
+    assert args.arch and args.shape
+    for mk in meshes:
+        run_cell(args.arch, args.shape, mk, args.out, tag=args.tag,
+                 run_overrides=overrides)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,422 @@
+"""HLO-text cost analyzer with correct while-loop (lax.scan) accounting.
+
+XLA's built-in `compiled.cost_analysis()` visits every computation ONCE —
+a lax.scan over L layers reports 1/L of the real FLOPs.  Since the entire
+framework scans layers/microbatches/time, we parse the optimized HLO text
+ourselves:
+
+  * dot FLOPs: 2 * prod(output dims) * contracted size (exact, from operand
+    shapes + contracting dims),
+  * while loops: cost(body) * trip count, trip count recovered from the
+    constant in the loop condition (scan always lowers to a counted loop);
+    nested loops compose multiplicatively,
+  * collective bytes: per-kind operand bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute, x enclosing trip
+    counts (operand shapes resolved through a per-computation symbol table —
+    optimized HLO does not inline operand types),
+  * memory traffic: fusions are XLA's HBM-traffic boundaries; we count
+    operands + outputs per op, adjusting fusion operands that are consumed
+    by a dynamic-slice inside the fusion down to the slice size (otherwise a
+    scanned L-layer weight stack would be counted L times per step).
+
+All quantities are per-device: the input is the SPMD-partitioned module.
+Validated against known programs in tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from functools import lru_cache
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "c64": 8, "c128": 16,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "f8e4m3fnuz": 1, "f8e3m4": 1, "f8e4m3b11fnuz": 1, "f4e2m1fn": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops whose operands/outputs we count as memory traffic (fusion boundaries)
+_TRAFFIC_OPS = {
+    "dot", "fusion", "convolution", "gather", "scatter", "dynamic-slice",
+    "dynamic-update-slice", "copy", "transpose", "reduce", "concatenate",
+    "slice", "pad", "reverse", "broadcast", "iota", "select-and-scatter",
+    "custom-call", "reduce-window", "sort", "rng", "rng-bit-generator",
+    "convert", "compare", "select", "add", "subtract", "multiply", "divide",
+    "exponential", "tanh", "maximum", "minimum", "log", "rsqrt", "sqrt",
+    "negate", "abs", "power", "and", "or", "xor", "clamp",
+} | set(COLLECTIVES)
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(.*?\)|[a-z][a-z0-9]*\[[\d,]*\]\S*)\s+"
+    r"([\w\-]+)\((.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s+->\s+.*\{$")
+_PARAM_DECL_RE = re.compile(r"\(([^)]*)\)\s+->")
+_CONST_RE = re.compile(r"=\s*[su]\d+\[\]\s+constant\((\d+)\)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    """(elements, bytes) of a (possibly tuple) HLO type string."""
+    total_e = total_b = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt == "token":
+            continue
+        bw = _DTYPE_BYTES.get(dt)
+        if bw is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total_e += n
+        total_b += n * bw
+    return total_e, total_b
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str          # everything after the '(' of the op call
+    operands: list[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list[Op]
+    symbols: dict[str, str]          # value name -> type string
+    param_types: list[str]
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k,
+                    {c: v * k for c, v in self.collective_bytes.items()})
+
+    def add(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for c in COLLECTIVES:
+            self.collective_bytes[c] += other.collective_bytes[c]
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry_name = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(s)
+            if m:
+                name = m.group(1)
+                pm = _PARAM_DECL_RE.search(s)
+                ptypes = []
+                if pm:
+                    for part in pm.group(1).split(", "):
+                        if ":" in part:
+                            ptypes.append(part.split(":", 1)[1].strip())
+                cur = Computation(name=name, ops=[], symbols={},
+                                  param_types=ptypes)
+                if s.startswith("ENTRY"):
+                    entry_name = name
+            continue
+        if s == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        # operands: %refs inside the first (...) — cut at the matching level
+        depth, end = 1, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_str = rest[:end]
+        operands = _OPERAND_RE.findall(operand_str)
+        op = Op(name=name, type_str=type_str, opcode=opcode, rest=rest,
+                operands=operands)
+        cur.symbols[name] = type_str
+        cur.ops.append(op)
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _trip_count(comps: dict[str, Computation], cond_name: str) -> int:
+    """Largest integer constant in the condition computation (scan lowers to
+    i < const). Dynamic conditions default to 1."""
+    seen: set[str] = set()
+
+    def scan(name: str) -> int:
+        if name in seen or name not in comps:
+            return 0
+        seen.add(name)
+        best = 0
+        for op in comps[name].ops:
+            if op.opcode == "constant":
+                # op line: %c = s32[] constant(8)   (rest starts after '(')
+                mc = re.match(r"(\d+)\)?", op.rest)
+                if mc and "[]" in op.type_str and op.type_str[0] in "su":
+                    best = max(best, int(mc.group(1)))
+            if op.opcode in ("fusion", "call"):
+                cm = re.search(r"calls=%?([\w.\-]+)", op.rest)
+                if cm:
+                    best = max(best, scan(cm.group(1)))
+        return best
+
+    t = scan(cond_name)
+    return max(t, 1)
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_dims = _shape_dims(op.type_str)
+    out_elems = math.prod(out_dims) if out_dims else 1
+    lhs = op.operands[0] if op.operands else None
+    lhs_type = comp.symbols.get(lhs, "")
+    lhs_dims = _shape_dims(lhs_type)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    contracted = 1
+    if m and lhs_dims:
+        for d in m.group(1).split(","):
+            if d:
+                di = int(d)
+                if di < len(lhs_dims):
+                    contracted *= lhs_dims[di]
+    return 2.0 * out_elems * contracted
+
+
+def _called_comp(op: Op, comps: dict[str, Computation]) -> Computation | None:
+    cm = re.search(r"calls=%?([\w.\-]+)", op.rest)
+    return comps.get(cm.group(1)) if cm else None
+
+
+def _fusion_root(called: Computation) -> Op | None:
+    return called.ops[-1] if called.ops else None
+
+
+def _dus_update_bytes(dus: Op, comp: Computation) -> int | None:
+    """Bytes of the update operand of a dynamic-update-slice."""
+    if len(dus.operands) < 2:
+        return None
+    t = comp.symbols.get(dus.operands[1])
+    if t is None:
+        return None
+    _, b = _shape_elems_bytes(t)
+    return b
+
+
+def _effective_output_bytes(op: Op, comp: Computation,
+                            comps: dict[str, Computation]) -> float:
+    """Output bytes, with dynamic-update-slice counted at UPDATE size: its
+    HLO result type is the full buffer, but only the slice is written (the
+    rest aliases in place).  Without this, a scan that appends one timestep
+    per iteration would be charged the whole (T, ...) buffer T times."""
+    if op.opcode == "dynamic-update-slice":
+        b = _dus_update_bytes(op, comp)
+        if b is not None:
+            return b
+    if op.opcode == "fusion":
+        called = _called_comp(op, comps)
+        if called:
+            root = _fusion_root(called)
+            if root is not None and root.opcode == "dynamic-update-slice":
+                b = _dus_update_bytes(root, called)
+                if b is not None:
+                    return b
+    _, ob = _shape_elems_bytes(op.type_str)
+    return ob
+
+
+def _operand_bytes(op: Op, comp: Computation,
+                   comps: dict[str, Computation]) -> float:
+    """Sum operand bytes; fusion operands consumed via dynamic-slice inside
+    the fused computation count at slice size, and the aliased full buffer
+    of a (fused) dynamic-update-slice is not counted as a read."""
+    slice_params: dict[int, int] = {}
+    skip_params: set[int] = set()
+    skip_operand0 = op.opcode == "dynamic-update-slice"
+    if op.opcode == "fusion":
+        called = _called_comp(op, comps)
+        if called:
+            pname_to_idx = {}
+            for o in called.ops:
+                if o.opcode == "parameter":
+                    pm = re.match(r"(\d+)\)?", o.rest)
+                    if pm:
+                        pname_to_idx[o.name] = int(pm.group(1))
+            for o in called.ops:
+                if o.opcode in ("dynamic-slice", "slice"):
+                    src = o.operands[0] if o.operands else None
+                    if src in pname_to_idx:
+                        _, b = _shape_elems_bytes(o.type_str)
+                        idx = pname_to_idx[src]
+                        slice_params[idx] = min(
+                            slice_params.get(idx, 1 << 62), b)
+            root = _fusion_root(called)
+            if root is not None and root.opcode == "dynamic-update-slice":
+                dst = root.operands[0] if root.operands else None
+                if dst in pname_to_idx:
+                    skip_params.add(pname_to_idx[dst])
+    total = 0.0
+    for i, name in enumerate(op.operands):
+        if skip_operand0 and i == 0:
+            continue
+        if i in skip_params:
+            continue
+        t = comp.symbols.get(name)
+        if t is None:
+            continue
+        _, b = _shape_elems_bytes(t)
+        if i in slice_params:
+            b = min(b, slice_params[i])
+        total += b
+    return total
+
+
+def loop_multipliers(comps: dict[str, Computation]) -> dict[str, float]:
+    """Execution multiplier per computation (product of enclosing while-loop
+    trip counts).  The dry-run profiler's primary tool."""
+    mults: dict[str, float] = {}
+
+    def walk(cname: str, mult: float):
+        comp = comps.get(cname)
+        if comp is None:
+            return
+        mults[cname] = mults.get(cname, 0.0) + mult
+        for op in comp.ops:
+            if op.opcode == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", op.rest)
+                cm = re.search(r"condition=%?([\w.\-]+)", op.rest)
+                trips = _trip_count(comps, cm.group(1)) if cm else 1
+                if bm:
+                    walk(bm.group(1), mult * trips)
+            elif op.opcode in ("fusion", "call"):
+                m = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", op.rest)
+                if m:
+                    walk(m.group(1), mult)
+
+    walk("__entry__", 1.0)
+    return mults
+
+
+def top_flops(text: str, k: int = 20) -> list[tuple[float, str, str, str]]:
+    """Top-k dot ops by loop-weighted FLOPs: (flops, computation, out_shape,
+    metadata-op-name fragment).  This is the dry-run 'profile'."""
+    comps = parse_module(text)
+    mults = loop_multipliers(comps)
+    rows = []
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        mult = mults.get(cname, 0.0)
+        if mult == 0.0:
+            continue
+        for op in comp.ops:
+            if op.opcode == "dot":
+                f = _dot_flops(op, comp) * mult
+                meta = ""
+                mm = re.search(r'op_name="([^"]+)"', op.rest)
+                if mm:
+                    meta = mm.group(1)[-80:]
+                rows.append((f, cname[:40], op.type_str[:48], meta))
+    rows.sort(reverse=True)
+    return rows[:k]
+
+
+def analyze_text(text: str) -> Cost:
+    comps = parse_module(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return Cost()
+    memo: dict[str, Cost] = {}
+
+    def cost_of(name: str) -> Cost:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        if comp is None:
+            return Cost()
+        memo[name] = Cost()  # cycle guard
+        c = Cost()
+        for op in comp.ops:
+            if op.opcode == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", op.rest)
+                cm = re.search(r"condition=%?([\w.\-]+)", op.rest)
+                trips = _trip_count(comps, cm.group(1)) if cm else 1
+                if bm:
+                    c.add(cost_of(bm.group(1)).scaled(trips))
+                continue
+            if op.opcode == "conditional":
+                for br in re.findall(
+                        r"(?:branch_computations=\{([^}]*)\}|"
+                        r"true_computation=%?([\w.\-]+)|"
+                        r"false_computation=%?([\w.\-]+))", op.rest):
+                    for piece in br:
+                        for nm in re.findall(r"%?([\w.\-]+)", piece or ""):
+                            c.add(cost_of(nm))
+                continue
+            if op.opcode == "call":
+                cm = re.search(r"to_apply=%?([\w.\-]+)", op.rest)
+                if cm:
+                    c.add(cost_of(cm.group(1)))
+                continue
+            if op.opcode == "dot":
+                c.flops += _dot_flops(op, comp)
+            elif op.opcode == "fusion":
+                cm = re.search(r"calls=%?([\w.\-]+)", op.rest)
+                if cm:
+                    inner = cost_of(cm.group(1))
+                    c.flops += inner.flops
+                    for k in COLLECTIVES:
+                        c.collective_bytes[k] += inner.collective_bytes[k]
+                # fusion output elements ~ 1 flop each (elementwise work);
+                # dus-rooted fusions count the update slice, not the buffer
+                eb = _effective_output_bytes(op, comp, comps)
+                c.flops += eb / 4.0  # ~elements (f32-normalized)
+            elif op.opcode in COLLECTIVES or any(
+                    op.opcode == f"{k}-start" for k in COLLECTIVES):
+                kind = op.opcode.replace("-start", "")
+                b = _operand_bytes(op, comp, comps)
+                c.collective_bytes[kind] += b
+            elif op.opcode.endswith("-done"):
+                continue
+            if op.opcode in _TRAFFIC_OPS:
+                c.bytes += (_effective_output_bytes(op, comp, comps)
+                            + _operand_bytes(op, comp, comps))
+        memo[name] = c
+        return c
+
+    return cost_of("__entry__")

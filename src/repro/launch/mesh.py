@@ -1,0 +1,29 @@
+"""Production meshes (assignment spec).
+
+`make_production_mesh` is a FUNCTION (never a module-level constant) so
+importing this module never touches jax device state.  Only
+launch/dryrun.py forces the 512 host devices.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_axis: int = 1) -> Mesh:
+    """Whatever devices exist, as (data, model) — used by tests/examples."""
+    n = len(jax.devices())
+    assert n % model_axis == 0
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def n_chips(mesh: Mesh) -> int:
+    return mesh.devices.size

@@ -1,0 +1,45 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Dry-run profiler: per-dot loop-weighted FLOPs breakdown of one cell.
+#   PYTHONPATH=src python -m repro.launch.profile_cell --arch grok-1-314b \
+#       --shape prefill_32k [--overrides '{"attn_q_chunk": 0}']
+
+import argparse
+import json
+
+
+def main():
+    import jax  # noqa: F401  (after XLA_FLAGS)
+    from repro.launch import hlo_cost
+    from repro.launch.dryrun import lower_cell, lower_embedding_cell
+    from repro.launch.mesh import make_production_mesh
+    from repro.configs import EMBEDDING_ARCHS
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--top", type=int, default=18)
+    ap.add_argument("--overrides", default=None)
+    a = ap.parse_args()
+    overrides = json.loads(a.overrides) if a.overrides else None
+
+    mesh = make_production_mesh(multi_pod=(a.mesh == "multi"))
+    if a.arch in EMBEDDING_ARCHS:
+        lowered, mflops = lower_embedding_cell(a.arch, mesh, overrides)
+    else:
+        lowered, mflops = lower_cell(a.arch, a.shape, mesh, overrides)
+    text = lowered.compile().as_text()
+    c = hlo_cost.analyze_text(text)
+    print(f"total flops/chip {c.flops:.3e}  bytes/chip {c.bytes:.3e}  "
+          f"coll/chip {sum(c.collective_bytes.values()):.3e}")
+    print(f"MODEL_FLOPS {mflops:.3e}  chips {mesh.devices.size}  "
+          f"ratio {mflops / (c.flops * mesh.devices.size + 1e-30):.3f}")
+    print(f"{'weighted flops':>15s}  {'computation':40s} {'out':40s} op")
+    for f, cn, ts, meta in hlo_cost.top_flops(text, a.top):
+        print(f"{f:15.3e}  {cn:40s} {ts:40s} {meta}")
+
+
+if __name__ == "__main__":
+    main()

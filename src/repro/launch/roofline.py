@@ -1,0 +1,187 @@
+"""Roofline-term extraction from compiled dry-run artifacts (assignment
+§ROOFLINE ANALYSIS).
+
+  compute term    = HLO_FLOPs  / (chips * peak_FLOP/s)
+  memory term     = HLO_bytes  / (chips * HBM_bw)
+  collective term = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis().  XLA's SPMD
+compiler emits one per-device module, so cost_analysis is per-device; we
+multiply by the chip count to get module totals and divide back by
+chips * peak when forming the terms (i.e. the per-device analysis IS the
+per-chip term — verified in tests/test_roofline.py).
+
+collective_bytes is not in cost_analysis: we parse the compiled HLO text
+and sum OPERAND sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction.
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "f8e4m3fnuz": 1, "f8e3m4": 1, "f8e4m3b11fnuz": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[\d,]*\]\S*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(([^)]*)\)"
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * b
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind operand bytes summed over the module."""
+    out: dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    for m in _INSTR_RE.finditer(hlo_text):
+        kind, operands = m.group(1), m.group(2)
+        # '-done' ops repeat the '-start' operands; count only starts + sync
+        span_start = hlo_text[max(0, m.start() - 200):m.end()]
+        if f"{kind}-done" in span_start.split("=")[-1]:
+            continue
+        total = 0
+        for sm in _SHAPE_RE.finditer(operands):
+            total += _shape_bytes(sm.group(1), sm.group(2))
+        out[kind] += total
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_per_chip: float
+    collectives: dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float       # MODEL_FLOPS / (HLO_FLOPs * chips)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def analyze(compiled, n_chips: int, model_flops: float) -> Roofline:
+    """Roofline terms from the compiled per-device SPMD module.
+
+    Uses the HLO-text analyzer (hlo_cost.py) rather than
+    compiled.cost_analysis(): XLA's analysis visits every computation once,
+    so a lax.scan over L layers would be undercounted by L (verified in
+    tests/test_hlo_cost.py)."""
+    from . import hlo_cost
+    text = compiled.as_text()
+    c = hlo_cost.analyze_text(text)
+    flops = c.flops
+    byt = c.bytes
+    coll = {k: int(v) for k, v in c.collective_bytes.items()}
+    cbytes = float(sum(coll.values()))
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byt / HBM_BW
+    collective_s = cbytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    total_flops = flops * n_chips
+    return Roofline(
+        flops_per_chip=flops,
+        bytes_per_chip=byt,
+        collective_bytes_per_chip=cbytes,
+        collectives=coll,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=model_flops,
+        useful_ratio=model_flops / total_flops if total_flops else 0.0,
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6 N D (train), 2 N D (prefill/decode), with N = active
+    non-embedding params (MoE counts top-k + shared experts only)."""
+    N = active_params(cfg)
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * N * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * N * tokens
+    return 2.0 * N * shape.global_batch   # decode: one token per sequence
+
+
+def total_params(cfg) -> float:
+    return _params(cfg, active_only=False)
+
+
+def active_params(cfg) -> float:
+    return _params(cfg, active_only=True)
+
+
+def _params(cfg, active_only: bool) -> float:
+    D, F, L = cfg.d_model, cfg.d_ff, cfg.num_layers
+    n = 0.0
+    if cfg.family in ("ssm",):
+        per = 4 * D * D + 2 * 32 * 5 * D + 2 * D * cfg.ssm_head_dim
+        per += D * F + F * D + D * D  # channel mix
+        n += L * per
+    elif cfg.family == "hybrid":
+        d_inner = 2 * D
+        per = D * (2 * d_inner + 2 * cfg.ssm_state +
+                   d_inner // cfg.ssm_head_dim) + d_inner * D
+        n += L * per
+        # one shared attn block
+        H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        n += D * H * hd + 2 * D * KV * hd + H * hd * D + 3 * D * F
+    else:
+        H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        attn = D * H * hd + 2 * D * KV * hd + H * hd * D
+        if cfg.mlp == "swiglu":
+            ffn = 3 * D * F
+        else:
+            ffn = 2 * D * F
+        if cfg.num_experts:
+            n_moe = L // cfg.moe_every
+            n_dense = L - n_moe
+            e = cfg.experts_per_token if active_only else cfg.num_experts
+            moe_ffn_params = e * 3 * D * F
+            if cfg.moe_shared_expert:
+                moe_ffn_params += 3 * D * F
+            n += n_dense * (attn + ffn) + n_moe * (attn + moe_ffn_params)
+        elif cfg.family == "vlm":
+            k = cfg.cross_attn_every
+            n_cross = L // k
+            n += L * (attn + ffn)  # cross layers ~ same param count
+            _ = n_cross
+        else:
+            n += L * (attn + ffn)
+    return n

@@ -1,0 +1,23 @@
+"""Trace-time activation-sharding hook.
+
+The launcher installs a constraint function before lowering; the model calls
+`constrain(x, tag)` on the residual stream between layer groups.  Keeping
+this out of ModelConfig lets the hillclimb flip activation shardings without
+touching model code.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+_ACT_CONSTRAINT: Callable | None = None
+
+
+def set_activation_constraint(fn: Callable | None):
+    global _ACT_CONSTRAINT
+    _ACT_CONSTRAINT = fn
+
+
+def constrain(x, tag: str):
+    if _ACT_CONSTRAINT is None:
+        return x
+    return _ACT_CONSTRAINT(x, tag)

@@ -1,0 +1,341 @@
+"""Common transformer layers: RMSNorm, RoPE, GQA attention (self/cross,
+cached, windowed, q-chunked), gated & squared-ReLU MLPs, embeddings.
+
+Conventions:
+  * params are nested dicts of jnp arrays; every init_* returns
+    (params, axes) where `axes` mirrors params with tuples of LOGICAL axis
+    names per dim — the sharding rule engine (distributed/sharding.py) maps
+    logical axes to mesh axes.
+  * master params are cfg.param_dtype; matmuls run in cfg.compute_dtype.
+  * attention head projections use the FLATTENED (H * head_dim) output dim so
+    tensor-parallel sharding never depends on head-count divisibility
+    (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Array = jnp.ndarray
+Params = dict
+Axes = dict
+
+
+def cdt(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def pdt(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _dense_init(key, shape, dtype, in_axis=0):
+    fan_in = shape[in_axis]
+    return (jax.random.normal(key, shape) / jnp.sqrt(fan_in)).astype(dtype)
+
+
+# -- RMSNorm ------------------------------------------------------------------
+
+def init_rmsnorm(key, cfg: ModelConfig, dim: int | None = None):
+    dim = dim or cfg.d_model
+    return {"scale": jnp.ones((dim,), pdt(cfg))}, {"scale": ("embed",)}
+
+
+def rmsnorm(p, x: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# -- RoPE ---------------------------------------------------------------------
+
+def rope_angles(positions: Array, head_dim: int, theta: float) -> tuple[Array, Array]:
+    """positions (...,) -> cos/sin of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x (..., S, H, D); cos/sin (S, D/2) or broadcastable."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    # broadcast cos/sin over head axis: (S, D/2) -> (S, 1, D/2)
+    c = cos[..., None, :].astype(jnp.float32)
+    s = sin[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * c - x2f * s, x2f * c + x1f * s], axis=-1
+    ).astype(x.dtype)
+
+
+# -- Attention ----------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig):
+    H, KV, hd, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    ks = jax.random.split(key, 4)
+    dt = pdt(cfg)
+    p = {
+        "wq": _dense_init(ks[0], (D, H * hd), dt),
+        "wk": _dense_init(ks[1], (D, KV * hd), dt),
+        "wv": _dense_init(ks[2], (D, KV * hd), dt),
+        "wo": _dense_init(ks[3], (H * hd, D), dt),
+    }
+    a = {
+        "wq": ("embed", "q_heads"),
+        "wk": ("embed", "kv_heads"),
+        "wv": ("embed", "kv_heads"),
+        "wo": ("q_heads", "embed"),
+    }
+    if cfg.qkv_bias:
+        p |= {
+            "bq": jnp.zeros((H * hd,), dt),
+            "bk": jnp.zeros((KV * hd,), dt),
+            "bv": jnp.zeros((KV * hd,), dt),
+        }
+        a |= {"bq": ("q_heads",), "bk": ("kv_heads",), "bv": ("kv_heads",)}
+    return p, a
+
+
+def _proj(x, w, b=None):
+    y = x @ w.astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def _gqa_scores_to_out(q, k, v, mask, compute_dtype):
+    """q (B,S,H,hd), k/v (B,T,KV,hd), mask broadcastable (B,1,1,S,T).
+    Grouped attention without materializing repeated KV.
+
+    Scores accumulate in f32 via preferred_element_type with bf16 inputs
+    (MXU-style) — an explicit .astype(f32) on K would materialize an f32
+    copy of the whole KV cache every decode step (§Perf decode iter 2)."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    qg = q.reshape(B, S, KV, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k.astype(qg.dtype),
+                        preferred_element_type=jnp.float32) / jnp.sqrt(hd)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs.astype(compute_dtype),
+                     v.astype(compute_dtype))
+    return out.reshape(B, S, H, hd)
+
+
+def attention(p, cfg: ModelConfig, x: Array, *,
+              positions: Array,
+              kv_src: Array | None = None,
+              cache: dict | None = None,
+              window: int = 0,
+              q_chunk: int = 0):
+    """Self/cross attention.
+
+    Train/prefill: cache is None; returns (y, kv) with kv = dict(k, v) so the
+    caller can build a decode cache.  kv_src != None => cross-attention (no
+    RoPE on kv, no causal mask).
+    """
+    from . import hooks
+    B, S, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = hooks.constrain(
+        _proj(x, p["wq"], p.get("bq")).reshape(B, S, H, hd), "qkv")
+    src = x if kv_src is None else kv_src
+    Skv = src.shape[1]
+    k = hooks.constrain(
+        _proj(src, p["wk"], p.get("bk")).reshape(B, Skv, KV, hd), "qkv")
+    v = hooks.constrain(
+        _proj(src, p["wv"], p.get("bv")).reshape(B, Skv, KV, hd), "qkv")
+
+    cross = kv_src is not None
+    if not cross:
+        cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    if cross:
+        mask = jnp.ones((1, 1, 1, S, Skv), bool)
+        out = _gqa_scores_to_out(q, k, v, mask, cdt(cfg))
+    elif q_chunk and S % q_chunk == 0 and S > q_chunk:
+        out = _chunked_causal(q, k, v, positions, window, q_chunk, cdt(cfg))
+    else:
+        ti = positions[:, None]          # (S,1) query positions
+        tj = positions[None, :]          # (1,S) key positions
+        mask = tj <= ti
+        if window:
+            mask = mask & (tj > ti - window)
+        out = _gqa_scores_to_out(q, k, v, mask[None, None, None], cdt(cfg))
+
+    y = _proj(out.reshape(B, S, H * hd), p["wo"])
+    return y, {"k": k, "v": v}
+
+
+def _chunked_causal(q, k, v, positions, window, q_chunk, compute_dtype):
+    """Flash-style query chunking: peak memory O(q_chunk * S) per head
+    instead of O(S^2) — used for the 32k prefill cells (DESIGN.md §5)."""
+    B, S, H, hd = q.shape
+    n_chunks = S // q_chunk
+
+    def body(_, qi):
+        qc, pos_c = qi                      # (B,C,H,hd), (C,)
+        ti = pos_c[:, None]
+        tj = positions[None, :]
+        mask = tj <= ti
+        if window:
+            mask = mask & (tj > ti - window)
+        out = _gqa_scores_to_out(qc, k, v, mask[None, None, None],
+                                 compute_dtype)
+        return None, out
+
+    q_r = q.reshape(B, n_chunks, q_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    pos_r = positions.reshape(n_chunks, q_chunk)
+    _, outs = jax.lax.scan(body, None, (q_r, pos_r))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+
+
+def decode_attention(p, cfg: ModelConfig, x: Array, cache: dict, *,
+                     window: int = 0):
+    """One-token self-attention step against a KV cache.
+
+    cache: {"k": (B, Smax, KV, hd), "v": ..., "pos": ()} — Smax is the ring
+    size when window > 0 (slot = pos % Smax), else the full context.
+    Returns (y, new_cache).
+    """
+    B, S1, D = x.shape
+    assert S1 == 1
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    pos = cache["pos"]
+    q = _proj(x, p["wq"], p.get("bq")).reshape(B, 1, H, hd)
+    k = _proj(x, p["wk"], p.get("bk")).reshape(B, 1, KV, hd)
+    v = _proj(x, p["wv"], p.get("bv")).reshape(B, 1, KV, hd)
+    cos, sin = rope_angles(pos[None], hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    Smax = cache["k"].shape[1]
+    slot = jnp.where(window > 0, pos % Smax, pos) if window else pos
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, 1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, 1)
+    slot_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["slot_pos"], pos[None], slot, 0)
+
+    tj = slot_pos[None, :]                       # (1, Smax) absolute positions
+    valid = (tj >= 0) & (tj <= pos)
+    if window:
+        valid = valid & (tj > pos - window)
+    out = _gqa_scores_to_out(q, ck, cv, valid[None, None, :, :], cdt(cfg))
+    y = _proj(out.reshape(B, 1, H * hd), p["wo"])
+    return y, {"k": ck, "v": cv, "pos": pos + 1, "slot_pos": slot_pos}
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  window: int = 0, dtype=jnp.bfloat16):
+    size = min(max_len, window) if window else max_len
+    return {
+        "k": jnp.zeros((batch, size, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, size, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+        "slot_pos": -jnp.ones((size,), jnp.int32),
+    }
+
+
+KV_CACHE_AXES = {"k": ("batch", "kv_seq", "kv_heads", None),
+                 "v": ("batch", "kv_seq", "kv_heads", None),
+                 "pos": (), "slot_pos": (None,)}
+
+
+# -- MLPs ---------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig):
+    D, F = cfg.d_model, cfg.d_ff
+    dt = pdt(cfg)
+    if cfg.mlp == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = {
+            "wi_gate": _dense_init(k1, (D, F), dt),
+            "wi_up": _dense_init(k2, (D, F), dt),
+            "wo": _dense_init(k3, (F, D), dt),
+        }
+        a = {"wi_gate": ("embed", "mlp"), "wi_up": ("embed", "mlp"),
+             "wo": ("mlp", "embed")}
+    elif cfg.mlp == "squared_relu":
+        k1, k2 = jax.random.split(key, 2)
+        p = {"wi": _dense_init(k1, (D, F), dt),
+             "wo": _dense_init(k2, (F, D), dt)}
+        a = {"wi": ("embed", "mlp"), "wo": ("mlp", "embed")}
+    else:
+        raise ValueError(f"unknown mlp {cfg.mlp!r}")
+    return p, a
+
+
+def mlp(p, cfg: ModelConfig, x: Array) -> Array:
+    if cfg.mlp == "swiglu":
+        g = jax.nn.silu(_proj(x, p["wi_gate"]))
+        u = _proj(x, p["wi_up"])
+        return _proj(g * u, p["wo"])
+    # squared ReLU (nemotron-4)
+    h = jax.nn.relu(_proj(x, p["wi"]))
+    return _proj(h * h, p["wo"])
+
+
+# -- Embeddings / head ---------------------------------------------------------
+
+def init_embedding(key, cfg: ModelConfig, n_tables: int = 1):
+    dt = pdt(cfg)
+    shape = (cfg.vocab_size, cfg.d_model)
+    if n_tables > 1:
+        shape = (n_tables,) + shape
+        ax = ("codebooks", "vocab", "embed")
+    else:
+        ax = ("vocab", "embed")
+    return ({"table": jax.random.normal(key, shape).astype(dt) * 0.02},
+            {"table": ax})
+
+
+def embed_tokens(p, cfg: ModelConfig, tokens: Array) -> Array:
+    """Gather embedding. tokens (B,S) or (B,S,n_codebooks) with stacked
+    tables (n_cb,V,D); codebook embeddings are summed (MusicGen-style)."""
+    table = p["table"].astype(cdt(cfg))
+    if tokens.ndim == 3:
+        ncb = tokens.shape[-1]
+        parts = [table[c][tokens[..., c]] for c in range(ncb)]
+        return sum(parts)
+    return table[tokens]
+
+
+def embed_tokens_onehot(p, cfg: ModelConfig, tokens: Array) -> Array:
+    """One-hot einsum embedding — shards cleanly over the vocab axis
+    (gathers on a sharded table lower to all-gathers; the one-hot einsum
+    reduce-scatters instead)."""
+    table = p["table"].astype(cdt(cfg))
+    oh = jax.nn.one_hot(tokens, cfg.vocab_size, dtype=table.dtype)
+    if tokens.ndim == 3:  # (B,S,ncb) with stacked tables (ncb,V,D)
+        return jnp.einsum("bscv,cvd->bsd", oh, table)
+    return jnp.einsum("bsv,vd->bsd", oh, table)
+
+
+def init_lm_head(key, cfg: ModelConfig, n_heads: int = 1):
+    dt = pdt(cfg)
+    shape = (cfg.d_model, cfg.vocab_size)
+    ax = ("embed", "vocab")
+    if n_heads > 1:
+        shape = (n_heads,) + shape
+        ax = ("codebooks",) + ax
+    return ({"w": _dense_init(key, shape, dt)}, {"w": ax})
+
+
+def lm_logits(p, cfg: ModelConfig, x: Array) -> Array:
+    w = p["w"].astype(cdt(cfg))
+    if w.ndim == 3:
+        return jnp.einsum("bsd,cdv->bscv", x, w)
+    return x @ w

@@ -1,0 +1,135 @@
+"""Mixture-of-experts layer (llama4-maverick top-1 + shared expert;
+grok-1 top-2) in the capacity-bucketed GSPMD formulation:
+
+  tokens are dispatched to (expert, capacity-slot) buckets with a one-hot
+  einsum, expert FFNs run batched over the expert dim, and results are
+  combined with the gate weights.  The expert dim shards over "model" (EP);
+  the dispatch einsums lower to all-to-alls on a sharded mesh.  Capacity
+  C = ceil(T * top_k / E * capacity_factor) keeps compiled FLOPs equal to
+  the *active* compute (plus the capacity slack) rather than E x dense.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .layers import _dense_init, cdt, pdt
+
+Array = jnp.ndarray
+
+
+def init_moe(key, cfg: ModelConfig):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    dt = pdt(cfg)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(ks[0], (D, E), dt),
+        "wi_gate": _dense_init(ks[1], (E, D, F), dt, in_axis=1),
+        "wi_up": _dense_init(ks[2], (E, D, F), dt, in_axis=1),
+        "wo": _dense_init(ks[3], (E, F, D), dt, in_axis=1),
+    }
+    a = {
+        "router": ("embed", "experts_r"),
+        "wi_gate": ("experts", "embed", "mlp"),
+        "wi_up": ("experts", "embed", "mlp"),
+        "wo": ("experts", "mlp", "embed"),
+    }
+    if cfg.moe_shared_expert:
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "wi_gate": _dense_init(k1, (D, F), dt),
+            "wi_up": _dense_init(k2, (D, F), dt),
+            "wo": _dense_init(k3, (F, D), dt),
+        }
+        a["shared"] = {"wi_gate": ("embed", "mlp"),
+                       "wi_up": ("embed", "mlp"),
+                       "wo": ("mlp", "embed")}
+    return p, a
+
+
+def _capacity(seq_len: int, cfg: ModelConfig) -> int:
+    """Per-sequence-row expert capacity (GSPMD/Switch formulation):
+    C = ceil(S * top_k * capacity_factor / E), rounded up to 4.
+
+    Keeping the batch dim OUT of the capacity pool is what makes the
+    dispatch einsum O(B * S * (S k cf) * D) — a few % of the expert
+    compute — instead of the O(T^2 D) a flat-token dispatch costs."""
+    c = -(-int(seq_len * cfg.experts_per_token * cfg.capacity_factor)
+          // cfg.num_experts)
+    if c >= 4:
+        c = -(-c // 4) * 4
+    return max(1, c)
+
+
+def moe_ffn(p, cfg: ModelConfig, x: Array, *, fp32_router: bool = True,
+            shard_dispatch: bool = True, decode_pool: bool = True) -> Array:
+    """x (B, S, D) -> (B, S, D).  Dense capacity-bucketed dispatch; the
+    expert dim shards over "model" (EP), so the dispatch einsums lower to
+    all-to-alls on the production mesh."""
+    B, S, D = x.shape
+    if S == 1 and B > 1 and decode_pool:
+        # decode: pool the whole batch into one routing row — otherwise the
+        # per-row capacity floor pads every expert to >=1 slot PER SEQUENCE
+        # (E x B slots for B real tokens; EXPERIMENTS.md §Perf, MoE-decode)
+        y = moe_ffn(p, cfg, x.reshape(1, B, D), fp32_router=fp32_router,
+                    shard_dispatch=shard_dispatch, decode_pool=False)
+        return y.reshape(B, 1, D)
+    E, K = cfg.num_experts, cfg.experts_per_token
+
+    rdt = jnp.float32 if fp32_router else x.dtype
+    logits = x.astype(rdt) @ p["router"].astype(rdt)        # (B,S,E)
+    gates_all = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(gates_all, K)                # (B,S,K)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+
+    C = _capacity(S, cfg)
+    oh = jax.nn.one_hot(topi, E, dtype=jnp.int32)           # (B,S,K,E)
+    flat = oh.reshape(B, S * K, E)
+    pos = (jnp.cumsum(flat, axis=1) * flat - 1).reshape(B, S, K, E)
+    keep = (pos >= 0) & (pos < C)
+    # dropped (token,k) pairs map to the overflow slot C, removed by the
+    # [..., :C] slice — overflow handling is exact
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, C), C + 1,
+                            dtype=x.dtype)[..., :C]         # (B,S,K,E,C)
+    from . import hooks
+    dispatch = jnp.einsum("bske,bskec->bsec", oh.astype(x.dtype), pos_oh)
+    combine = jnp.einsum("bsk,bske,bskec->bsec", topv.astype(x.dtype),
+                         oh.astype(x.dtype), pos_oh)
+    if shard_dispatch:
+        # shard the dispatch/combine tensors over (batch, experts): without
+        # this the O(B S (S k cf) D) dispatch einsums run with the model
+        # axis idle and dominate per-chip FLOPs (§Perf, grok iter 1)
+        dispatch = hooks.constrain(dispatch, "moe_dispatch")
+        combine = hooks.constrain(combine, "moe_dispatch")
+
+    xe = jnp.einsum("bsec,bsd->ebcd", dispatch, x)           # (E,B,C,D)
+    if shard_dispatch:
+        xe = hooks.constrain(xe, "moe_expert")
+    g = jax.nn.silu(jnp.einsum("ebcd,edf->ebcf", xe,
+                               p["wi_gate"].astype(x.dtype)))
+    u = jnp.einsum("ebcd,edf->ebcf", xe, p["wi_up"].astype(x.dtype))
+    ye = jnp.einsum("ebcf,efd->ebcd", g * u, p["wo"].astype(x.dtype))
+    if shard_dispatch:
+        ye = hooks.constrain(ye, "moe_expert")
+    y = jnp.einsum("bsec,ebcd->bsd", combine, ye)            # (B,S,D)
+
+    if cfg.moe_shared_expert:
+        sp = p["shared"]
+        gs = jax.nn.silu(x @ sp["wi_gate"].astype(x.dtype))
+        us = x @ sp["wi_up"].astype(x.dtype)
+        y = y + (gs * us) @ sp["wo"].astype(x.dtype)
+    return y
+
+
+def aux_load_balance_loss(p, cfg: ModelConfig, x: Array) -> Array:
+    """Switch-style load-balancing auxiliary loss (mean over tokens)."""
+    B, S, D = x.shape
+    xt = x.reshape(B * S, D).astype(jnp.float32)
+    probs = jax.nn.softmax(xt @ p["router"].astype(jnp.float32), axis=-1)
+    top1 = jnp.argmax(probs, axis=-1)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top1, cfg.num_experts, dtype=jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    return cfg.num_experts * jnp.sum(frac_tokens * frac_probs)

@@ -1,0 +1,294 @@
+"""Attention-free sequence mixers: RWKV6 (Finch) and Mamba2 (SSD).
+
+Both are O(T) in sequence length with O(1)-state decode — these are the
+archs that run the long_500k cell (DESIGN.md §4).
+
+RWKV6 time-mix (data-dependent decay, arXiv:2404.05892), per head of size
+hd, with state S (hd_k x hd_v):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t ( diag(u) k_t v_t^T + S_{t-1} )
+
+where w_t = exp(-exp(w0 + lora_w(x_t))) is the data-dependent decay and the
+r/k/v/g token-shift mixings use LoRA-modulated interpolation.
+
+Mamba2 (SSD, arXiv:2405.21060 minimal form), per head with state (P x N):
+
+    h_t = exp(A dt_t) h_{t-1} + dt_t * (x_t outer B_t)
+    y_t = h_t C_t + D x_t
+
+Train/prefill use lax.scan over time (a chunked parallel form is the
+documented TPU optimization path); decode is a single state update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .layers import _dense_init, cdt, pdt
+
+Array = jnp.ndarray
+
+_LORA_R = 32  # LoRA rank for RWKV6 data-dependent modulation
+
+
+# ====================  RWKV6 (Finch)  ========================================
+
+def init_rwkv6_time_mix(key, cfg: ModelConfig):
+    D = cfg.d_model
+    hd = cfg.ssm_head_dim
+    H = D // hd
+    dt = pdt(cfg)
+    ks = jax.random.split(key, 12)
+    p = {
+        # token-shift interpolation vectors (r, k, v, w, g) + base
+        "maa_x": jnp.zeros((D,), dt),
+        "maa_rkvwg": jnp.zeros((5, D), dt),
+        "lora_A": _dense_init(ks[0], (D, 5 * _LORA_R), dt),
+        "lora_B": jnp.zeros((5, _LORA_R, D), dt),
+        "w0": jnp.full((H, hd), -6.0, dt),          # decay base (slow decay)
+        "w_lora_A": _dense_init(ks[1], (D, _LORA_R), dt),
+        "w_lora_B": jnp.zeros((_LORA_R, D), dt),
+        "u": jnp.zeros((H, hd), dt),                # per-channel bonus
+        "wr": _dense_init(ks[2], (D, D), dt),
+        "wk": _dense_init(ks[3], (D, D), dt),
+        "wv": _dense_init(ks[4], (D, D), dt),
+        "wg": _dense_init(ks[5], (D, D), dt),
+        "wo": _dense_init(ks[6], (D, D), dt),
+        "ln_scale": jnp.ones((D,), dt),             # per-head group norm
+    }
+    a = {
+        "maa_x": ("embed",), "maa_rkvwg": (None, "embed"),
+        "lora_A": ("embed", None), "lora_B": (None, None, "embed"),
+        "w0": ("ssm_heads", None),
+        "w_lora_A": ("embed", None), "w_lora_B": (None, "embed"),
+        "u": ("ssm_heads", None),
+        "wr": ("embed", "ssm_proj"), "wk": ("embed", "ssm_proj"),
+        "wv": ("embed", "ssm_proj"), "wg": ("embed", "ssm_proj"),
+        "wo": ("ssm_proj", "embed"),
+        "ln_scale": ("embed",),
+    }
+    return p, a
+
+
+def _rwkv_mix(p, x, x_prev):
+    """Data-dependent token-shift mixing -> (xr, xk, xv, xw, xg)."""
+    d = x_prev - x
+    xx = x + d * p["maa_x"].astype(x.dtype)
+    lo = jnp.tanh(xx @ p["lora_A"].astype(x.dtype))
+    B, S, _ = x.shape
+    lo = lo.reshape(B, S, 5, _LORA_R)
+    mod = jnp.einsum("bsfr,frd->fbsd", lo, p["lora_B"].astype(x.dtype))
+    maa = p["maa_rkvwg"].astype(x.dtype)[:, None, None, :]
+    return x[None] + d[None] * (maa + mod)        # (5, B, S, D)
+
+
+def _rwkv_decay(p, xw):
+    """Data-dependent per-channel decay w in (0, 1)."""
+    lora = jnp.tanh(xw @ p["w_lora_A"].astype(xw.dtype)) @ \
+        p["w_lora_B"].astype(xw.dtype)
+    w0 = p["w0"].astype(jnp.float32).reshape(-1)
+    return jnp.exp(-jnp.exp(w0 + lora.astype(jnp.float32)))  # (B,S,D) f32
+
+
+def _rwkv_groupnorm(y, scale, H, eps=1e-5):
+    """Per-head LayerNorm on (B, S, H, hd) flattened output."""
+    B, S, D = y.shape
+    yh = y.reshape(B, S, H, D // H).astype(jnp.float32)
+    mu = jnp.mean(yh, axis=-1, keepdims=True)
+    var = jnp.var(yh, axis=-1, keepdims=True)
+    yn = (yh - mu) * jax.lax.rsqrt(var + eps)
+    return (yn.reshape(B, S, D) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def rwkv6_time_mix(p, cfg: ModelConfig, x: Array, state: dict):
+    """x (B,S,D); state {"x_prev": (B,D), "wkv": (B,H,hd,hd) f32}.
+    Returns (y, new_state).  Works for S == 1 (decode) and S > 1."""
+    B, S, D = x.shape
+    hd = cfg.ssm_head_dim
+    H = D // hd
+    x_prev = jnp.concatenate([state["x_prev"][:, None], x[:, :-1]], axis=1)
+    xr, xk, xv, xw, xg = _rwkv_mix(p, x, x_prev)
+    r = (xr @ p["wr"].astype(x.dtype)).reshape(B, S, H, hd)
+    k = (xk @ p["wk"].astype(x.dtype)).reshape(B, S, H, hd)
+    v = (xv @ p["wv"].astype(x.dtype)).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ p["wg"].astype(x.dtype))
+    w = _rwkv_decay(p, xw).reshape(B, S, H, hd)
+    u = p["u"].astype(jnp.float32)
+
+    def step(S_state, inp):
+        rt, kt, vt, wt = inp  # (B,H,hd) each
+        kv = jnp.einsum("bhk,bhv->bhkv", kt.astype(jnp.float32),
+                        vt.astype(jnp.float32))
+        yt = jnp.einsum("bhk,bhkv->bhv", rt.astype(jnp.float32),
+                        u[None, :, :, None] * kv + S_state)
+        S_new = wt.astype(jnp.float32)[..., None] * S_state + kv
+        return S_new, yt
+
+    xs = (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3))
+    S_final, ys = jax.lax.scan(step, state["wkv"], xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+    y = _rwkv_groupnorm(y, p["ln_scale"], H)
+    y = (y * g) @ p["wo"].astype(x.dtype)
+    return y, {"x_prev": x[:, -1], "wkv": S_final}
+
+
+def init_rwkv6_channel_mix(key, cfg: ModelConfig):
+    D, F = cfg.d_model, cfg.d_ff
+    dt = pdt(cfg)
+    ks = jax.random.split(key, 3)
+    p = {
+        "maa_k": jnp.zeros((D,), dt),
+        "maa_r": jnp.zeros((D,), dt),
+        "wk": _dense_init(ks[0], (D, F), dt),
+        "wv": _dense_init(ks[1], (F, D), dt),
+        "wr": _dense_init(ks[2], (D, D), dt),
+    }
+    a = {"maa_k": ("embed",), "maa_r": ("embed",),
+         "wk": ("embed", "mlp"), "wv": ("mlp", "embed"),
+         "wr": ("embed", "ssm_proj")}
+    return p, a
+
+
+def rwkv6_channel_mix(p, cfg: ModelConfig, x: Array, state: dict):
+    x_prev = jnp.concatenate([state["x_prev"][:, None], x[:, :-1]], axis=1)
+    d = x_prev - x
+    xk = x + d * p["maa_k"].astype(x.dtype)
+    xr = x + d * p["maa_r"].astype(x.dtype)
+    k = jax.nn.relu(xk @ p["wk"].astype(x.dtype)) ** 2
+    r = jax.nn.sigmoid(xr @ p["wr"].astype(x.dtype))
+    y = r * (k @ p["wv"].astype(x.dtype))
+    return y, {"x_prev": x[:, -1]}
+
+
+def init_rwkv6_state(cfg: ModelConfig, batch: int):
+    D, hd = cfg.d_model, cfg.ssm_head_dim
+    H = D // hd
+    return {
+        "tm": {"x_prev": jnp.zeros((batch, D), jnp.bfloat16),
+               "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32)},
+        "cm": {"x_prev": jnp.zeros((batch, D), jnp.bfloat16)},
+    }
+
+
+RWKV6_STATE_AXES = {
+    "tm": {"x_prev": ("batch", "embed_act"),
+           "wkv": ("batch", "ssm_heads", None, None)},
+    "cm": {"x_prev": ("batch", "embed_act")},
+}
+
+
+# ====================  Mamba2 (SSD)  =========================================
+
+def init_mamba2(key, cfg: ModelConfig):
+    D = cfg.d_model
+    d_inner = 2 * D
+    hd = cfg.ssm_head_dim
+    H = d_inner // hd
+    N = cfg.ssm_state
+    conv_dim = d_inner + 2 * N
+    dt = pdt(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "in_proj": _dense_init(ks[0], (D, 2 * d_inner + 2 * N + H), dt),
+        "conv_w": _dense_init(ks[1], (cfg.ssm_conv, conv_dim), dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.zeros((H,), dt),
+        "D": jnp.ones((H,), dt),
+        "dt_bias": jnp.zeros((H,), dt),
+        "norm_scale": jnp.ones((d_inner,), dt),
+        "out_proj": _dense_init(ks[2], (d_inner, D), dt),
+    }
+    a = {
+        "in_proj": ("embed", "ssm_proj"),
+        "conv_w": (None, "ssm_proj"), "conv_b": ("ssm_proj",),
+        "A_log": ("ssm_heads",), "D": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "norm_scale": ("ssm_proj",),
+        "out_proj": ("ssm_proj", "embed"),
+    }
+    return p, a
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv over time. x (B,S,C), w (K,C).
+    conv_state (B,K-1,C) carries the left context for decode/chunks."""
+    K = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)          # (B, S+K-1, C)
+    out = sum(
+        xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(K)
+    ) + b.astype(x.dtype)
+    new_state = xp[:, -(K - 1):]
+    return jax.nn.silu(out), new_state
+
+
+def mamba2(p, cfg: ModelConfig, x: Array, state: dict):
+    """x (B,S,D); state {"conv": (B,K-1,conv_dim), "ssm": (B,H,hd,N) f32}."""
+    B, S, D = x.shape
+    d_inner = 2 * D
+    hd = cfg.ssm_head_dim
+    H = d_inner // hd
+    N = cfg.ssm_state
+
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + d_inner + 2 * N]
+    dt_raw = zxbcdt[..., -H:]
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                   state["conv"])
+    xs = xbc[..., :d_inner].reshape(B, S, H, hd)
+    Bmat = xbc[..., d_inner:d_inner + N]            # (B,S,N)
+    Cmat = xbc[..., d_inner + N:]                   # (B,S,N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))    # (H,)
+    dA = jnp.exp(dt * A)                            # (B,S,H)
+
+    def step(h, inp):
+        xt, Bt, Ct, dAt, dtt = inp
+        # h (B,H,hd,N)
+        upd = jnp.einsum("bhp,bn->bhpn", (dtt[..., None] * xt.astype(jnp.float32)),
+                         Bt.astype(jnp.float32))
+        h = dAt[..., None, None] * h + upd
+        yt = jnp.einsum("bhpn,bn->bhp", h, Ct.astype(jnp.float32))
+        return h, yt
+
+    xs_t = xs.transpose(1, 0, 2, 3)
+    inp = (xs_t, Bmat.transpose(1, 0, 2), Cmat.transpose(1, 0, 2),
+           dA.transpose(1, 0, 2), dt.transpose(1, 0, 2))
+    h_final, ys = jax.lax.scan(step, state["ssm"], inp)
+    y = ys.transpose(1, 0, 2, 3)                    # (B,S,H,hd)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * \
+        xs.astype(jnp.float32)
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    # gated RMSNorm (mamba2 style)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-5)).astype(x.dtype)
+    y = y * p["norm_scale"].astype(x.dtype)
+    y = y @ p["out_proj"].astype(x.dtype)
+    return y, {"conv": conv_state.astype(state["conv"].dtype), "ssm": h_final}
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int):
+    D = cfg.d_model
+    d_inner = 2 * D
+    hd = cfg.ssm_head_dim
+    H = d_inner // hd
+    N = cfg.ssm_state
+    conv_dim = d_inner + 2 * N
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), jnp.bfloat16),
+        "ssm": jnp.zeros((batch, H, hd, N), jnp.float32),
+    }
+
+
+MAMBA2_STATE_AXES = {"conv": ("batch", None, "ssm_proj"),
+                     "ssm": ("batch", "ssm_heads", None, None)}

@@ -1,0 +1,129 @@
+"""Train-step / serve-step factories.
+
+train_step = microbatched value_and_grad (lax.scan accumulation, optional
+int8 error-feedback compression) + AdamW.  The whole step is one jit'd
+program; at scale it is lowered with explicit in/out shardings
+(launch/dryrun.py, launch/train.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.optim import adamw
+from repro.optim.compress import compress_with_feedback, init_feedback
+
+from . import hooks
+from .model import Model, build_model
+
+Array = jnp.ndarray
+
+
+def init_train_state(model: Model, key) -> tuple[dict, dict]:
+    """Returns (state, axes). state = {params, opt, step}."""
+    params, axes = model.init_params(key)
+    opt = adamw.init(params, moment_dtype=model.run.moment_dtype)
+    state = {"params": params, "opt": opt,
+             "step": jnp.zeros((), jnp.int32)}
+    return state, axes
+
+
+def train_state_specs(model: Model, key=None):
+    """ShapeDtypeStruct version of init_train_state + the logical axes tree
+    (no device allocation — dry-run path)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    captured = {}
+
+    def f(k):
+        state, axes = init_train_state(model, k)
+        captured["axes"] = axes
+        return state
+
+    state_specs = jax.eval_shape(f, key)
+    return state_specs, captured["axes"]
+
+
+def params_specs(model: Model, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    captured = {}
+
+    def f(k):
+        p, a = model.init_params(k)
+        captured["axes"] = a
+        return p
+
+    p_specs = jax.eval_shape(f, key)
+    return p_specs, captured["axes"]
+
+
+def make_train_step(model: Model, opt_cfg: adamw.AdamWConfig,
+                    grad_shardings=None):
+    """grad_shardings: optional NamedSharding tree matching params.  When
+    given, per-microbatch gradients are constrained to the parameter
+    sharding — the backward's data-axis reduction then lowers to
+    reduce-scatters onto the FSDP shards instead of full fp32 all-reduces
+    (ZeRO; EXPERIMENTS.md §Perf nemotron iter 1: 16x collective cut)."""
+    run = model.run
+
+    def _constrain_grads(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(jax.lax.with_sharding_constraint, g,
+                            grad_shardings)
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        def loss_fn(p, b):
+            return model.train_loss(p, b)
+
+        nmb = run.num_microbatches
+        if nmb > 1:
+            mb = jax.tree.map(
+                lambda x: x.reshape((nmb, x.shape[0] // nmb) + x.shape[1:]),
+                batch)
+            g0 = _constrain_grads(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            err0 = init_feedback(params) if run.grad_compress else None
+
+            def acc(carry, b):
+                gacc, lacc, err = carry
+                l, g = jax.value_and_grad(loss_fn)(params, b)
+                g = _constrain_grads(g)
+                if run.grad_compress:
+                    g, err = compress_with_feedback(g, err)
+                gacc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), gacc, g)
+                return (_constrain_grads(gacc), lacc + l, err), None
+
+            (grads, lsum, _), _ = jax.lax.scan(
+                acc, (g0, jnp.zeros((), jnp.float32), err0), mb)
+            grads = jax.tree.map(lambda x: x / nmb, grads)
+            loss = lsum / nmb
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = _constrain_grads(grads)
+
+        new_p, new_opt, metrics = adamw.update(
+            opt_cfg, grads, state["opt"], params)
+        new_state = {"params": new_p, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def make_prefill(model: Model):
+    def prefill(params, batch):
+        return model.prefill(params, batch)
+    return prefill
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, caches, tokens):
+        return model.decode_step(params, caches, tokens)
+    return decode_step

@@ -1,0 +1,3 @@
+from . import adamw, compress
+
+__all__ = ["adamw", "compress"]

@@ -1,0 +1,46 @@
+"""int8 gradient compression with error feedback (DESIGN.md §5).
+
+Applied at the microbatch-accumulation boundary: each microbatch gradient is
+quantized to int8 with a per-tensor scale before entering the accumulator;
+the quantization residual is carried into the next microbatch (error
+feedback), so the accumulated bias vanishes over the accumulation window.
+At multi-pod scale the same quantize/dequantize pair brackets the cross-pod
+gradient reduction, cutting DCN bytes 4x vs fp32 (collective-term knob in
+the roofline).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(grad: Any, err: Any) -> tuple[Any, Any]:
+    """Returns (dequantized grads to accumulate, new error feedback)."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = quantize(g32)
+        deq = dequantize(q, s)
+        return deq, g32 - deq
+
+    flat_g, tdef = jax.tree.flatten(grad)
+    flat_e = jax.tree.leaves(err)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in outs]),
+            jax.tree.unflatten(tdef, [o[1] for o in outs]))
+
+
+def init_feedback(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

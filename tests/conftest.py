@@ -1,0 +1,30 @@
+"""Shared fixtures. NOTE: no XLA device-count forcing here — smoke tests and
+benchmarks must see the real single CPU device; only launch/dryrun.py forces
+512 host devices (and runs as its own process)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+def three_loops(n_per: int = 40, loops: int = 3, dim: int = 16, seed: int = 0):
+    """COIL-like synthetic data: `loops` 1-D closed manifolds in R^dim."""
+    ts = jnp.linspace(0, 2 * jnp.pi, n_per, endpoint=False)
+    pts = []
+    for i in range(loops):
+        c = jax.random.normal(jax.random.PRNGKey(seed + 10 + i), (dim,)) * 3
+        proj = jax.random.normal(jax.random.PRNGKey(seed + 20 + i), (2, dim))
+        circ = jnp.stack([jnp.cos(ts), jnp.sin(ts)], -1) @ proj
+        pts.append(circ + c)
+    return jnp.concatenate(pts)
+
+
+@pytest.fixture(scope="session")
+def small_data():
+    return three_loops(n_per=24, loops=3, dim=10)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,55 @@
+"""Perplexity calibration and affinity construction."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.affinities import (
+    calibrated_conditionals,
+    make_affinities,
+    sne_affinities,
+    sq_distances,
+)
+from tests.conftest import three_loops
+
+
+def test_sq_distances_basic():
+    Y = jnp.array([[0.0, 0.0], [3.0, 4.0], [0.0, 1.0]])
+    D2 = sq_distances(Y)
+    assert jnp.allclose(jnp.diag(D2), 0.0)
+    assert np.isclose(float(D2[0, 1]), 25.0)
+    assert np.isclose(float(D2[0, 2]), 1.0)
+    assert jnp.allclose(D2, D2.T)
+
+
+@pytest.mark.parametrize("perp", [5.0, 15.0])
+def test_perplexity_calibration(perp):
+    Y = three_loops(n_per=20, loops=2, dim=8)
+    D2 = sq_distances(Y)
+    P = calibrated_conditionals(D2, perp)
+    assert jnp.allclose(jnp.sum(P, axis=1), 1.0, atol=1e-4)
+    assert jnp.allclose(jnp.diag(P), 0.0)
+    H = -jnp.sum(jnp.where(P > 0, P * jnp.log(jnp.maximum(P, 1e-37)), 0.0), axis=1)
+    # entropy == log(perplexity) per row
+    assert jnp.allclose(H, jnp.log(perp), atol=5e-2)
+
+
+def test_joint_affinities_sum_to_one():
+    Y = three_loops(n_per=16, loops=2, dim=8)
+    P = sne_affinities(Y, perplexity=8.0)
+    assert np.isclose(float(jnp.sum(P)), 1.0, atol=1e-5)
+    assert jnp.allclose(P, P.T, atol=1e-7)
+    assert jnp.all(P >= 0)
+
+
+def test_make_affinities_scaling():
+    """Normalized models get the joint P (sum 1); EE-family gets symmetrized
+    conditionals (degrees ~ 1) — DESIGN.md §3 scaling note."""
+    Y = three_loops(n_per=16, loops=2, dim=8)
+    a_sne = make_affinities(Y, 8.0, model="ssne")
+    a_ee = make_affinities(Y, 8.0, model="ee")
+    assert np.isclose(float(jnp.sum(a_sne.Wp)), 1.0, atol=1e-5)
+    deg = jnp.sum(a_ee.Wp, axis=1)
+    assert np.isclose(float(jnp.mean(deg)), 1.0, atol=1e-3)
+    n = Y.shape[0]
+    assert np.isclose(float(jnp.sum(a_ee.Wm)), n * (n - 1))

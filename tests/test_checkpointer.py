@@ -1,0 +1,66 @@
+"""Checkpointer: atomicity, integrity, keep-k GC, elastic restore."""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import Checkpointer
+
+
+def _tree(step):
+    return {"X": jnp.arange(12.0).reshape(3, 4) + step,
+            "opt": {"m": jnp.ones((5,)) * step}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(3, _tree(3))
+    restored = ck.restore(3, _tree(0))
+    np.testing.assert_allclose(np.asarray(restored["X"]), np.asarray(_tree(3)["X"]))
+    np.testing.assert_allclose(np.asarray(restored["opt"]["m"]), 3.0)
+
+
+def test_latest_and_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree(s))
+    assert ck.latest_step() == 4
+    assert ck.all_steps() == [3, 4]  # keep-2 GC
+
+
+def test_corruption_detected(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(1))
+    # corrupt one array
+    path = os.path.join(str(tmp_path), "step_000000000001", "arr_0.npy")
+    arr = np.load(path)
+    arr[0] += 1
+    np.save(path, arr)
+    with pytest.raises(IOError, match="corruption"):
+        ck.restore(1, _tree(0))
+
+
+def test_restore_latest_empty(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    step, tree = ck.restore_latest(_tree(0))
+    assert step is None and tree is None
+
+
+def test_async_save(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=True)
+    ck.save(7, _tree(7))
+    ck.wait()
+    assert ck.latest_step() == 7
+
+
+def test_manifest_contents(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(2, _tree(2))
+    with open(os.path.join(str(tmp_path), "step_000000000002",
+                           "manifest.json")) as f:
+        m = json.load(f)
+    assert m["step"] == 2
+    assert len(m["arrays"]) == 2
+    assert m["arrays"][0]["shape"] == [3, 4]

@@ -1,0 +1,72 @@
+"""unit-W- path (storage-free repulsion) must match the two-matrix path
+exactly when W- == ones off-diagonal — including the diagonal correction
+in the 2-D decomposition (multi-device subprocess)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy_and_grad, make_affinities
+from repro.embed import (EmbedMeshSpec, make_distributed_energy_grad,
+                         replicate, shard_pairwise)
+from tests.conftest import three_loops
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_unit_wm_matches_dense_single_device():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    spec = EmbedMeshSpec(row_axes=("data",), col_axis="model")
+    Y = three_loops(n_per=16, loops=2, dim=8)
+    X = jax.random.normal(jax.random.PRNGKey(0), (Y.shape[0], 2)) * 0.5
+    for kind, lam in [("ee", 50.0), ("ssne", 1.0), ("tsne", 1.0)]:
+        aff = make_affinities(Y, 8.0, model=kind)
+        eg = make_distributed_energy_grad(mesh, spec, kind, unit_wm=True)
+        E1, G1 = eg(X, shard_pairwise(mesh, spec, aff.Wp), lam)
+        E2, G2 = energy_and_grad(X, aff, kind, lam)
+        assert np.isclose(float(E1), float(E2), rtol=1e-4), kind
+        rel = float(jnp.linalg.norm(G1 - G2) / jnp.linalg.norm(G2))
+        assert rel < 1e-4, (kind, rel)
+
+
+_PROG = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import AxisType
+    from repro.core import make_affinities, energy_and_grad
+    from repro.embed import (EmbedMeshSpec, make_distributed_energy_grad,
+                             shard_pairwise)
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+    spec = EmbedMeshSpec(row_axes=("data",), col_axis="model")
+    N = 64
+    Y = jax.random.normal(jax.random.PRNGKey(0), (N, 8))
+    X = jax.random.normal(jax.random.PRNGKey(1), (N, 2)) * 0.5
+    for kind, lam in [("ee", 50.0), ("tsne", 1.0)]:
+        aff = make_affinities(Y, 10.0, model=kind)
+        eg = make_distributed_energy_grad(mesh, spec, kind, unit_wm=True)
+        E1, G1 = eg(X, shard_pairwise(mesh, spec, aff.Wp), lam)
+        E2, G2 = energy_and_grad(X, aff, kind, lam)
+        assert np.isclose(float(E1), float(E2), rtol=1e-4), (kind, float(E1), float(E2))
+        rel = float(jnp.linalg.norm(G1 - G2) / jnp.linalg.norm(G2))
+        assert rel < 1e-4, (kind, rel)
+    print("UNITWM_OK")
+""")
+
+
+def test_unit_wm_diagonal_correction_multidevice():
+    """4x2 mesh: diagonal tiles land on specific (data, model) pairs; the
+    per-tile diagonal count must be exact for the global scalar s."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _PROG],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "UNITWM_OK" in out.stdout

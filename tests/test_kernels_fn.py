@@ -1,0 +1,41 @@
+"""Kernel-function algebra: K1 = (log K)', K2 = K''/K, K21 = K2 - K1^2."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.kernels_fn import GAUSSIAN, STUDENT_T, EPANECHNIKOV, get_kernel
+
+
+@pytest.mark.parametrize("kern", [GAUSSIAN, STUDENT_T])
+def test_derived_quantities_match_autodiff(kern):
+    ts = jnp.linspace(0.01, 5.0, 50)
+    dK = jax.vmap(jax.grad(lambda t: kern.K(t)))(ts)
+    d2K = jax.vmap(jax.grad(jax.grad(lambda t: kern.K(t))))(ts)
+    K = kern.K(ts)
+    assert jnp.allclose(kern.K1(ts), dK / K, rtol=1e-4, atol=1e-6)
+    assert jnp.allclose(kern.K2(ts), d2K / K, rtol=1e-4, atol=1e-6)
+    assert jnp.allclose(kern.K21(ts), kern.K2(ts) - kern.K1(ts) ** 2,
+                        rtol=1e-4, atol=1e-6)
+
+
+def test_epanechnikov_support():
+    ts = jnp.array([0.0, 0.5, 0.999, 1.0, 2.0])
+    K = EPANECHNIKOV.K(ts)
+    assert jnp.allclose(K, jnp.array([1.0, 0.5, 0.001, 0.0, 0.0]), atol=1e-6)
+    # K2 identically zero (the paper's "simplest Hessian" family, fn. 1)
+    assert jnp.all(EPANECHNIKOV.K2(ts) == 0.0)
+
+
+def test_positive_decreasing():
+    ts = jnp.linspace(0.0, 10.0, 100)
+    for kern in (GAUSSIAN, STUDENT_T):
+        K = kern.K(ts)
+        assert jnp.all(K > 0)
+        assert jnp.all(jnp.diff(K) < 0)
+        assert jnp.all(kern.K1(ts) < 0)  # paper's K1 <= 0 condition
+
+
+def test_registry():
+    assert get_kernel("gaussian") is GAUSSIAN
+    with pytest.raises(ValueError):
+        get_kernel("nope")

@@ -1,0 +1,73 @@
+"""Graph-Laplacian properties, including hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.laplacian import (
+    degree,
+    knn_sparsify,
+    laplacian,
+    laplacian_matmul,
+    sparsified_attractive_matrix,
+    symmetrize,
+    zero_diagonal,
+)
+
+
+def _rand_W(seed: int, n: int):
+    W = jnp.abs(jax.random.normal(jax.random.PRNGKey(seed), (n, n)))
+    return zero_diagonal(symmetrize(W))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(3, 24))
+def test_laplacian_psd(seed, n):
+    """u^T L u = 1/2 sum w_nm (u_n - u_m)^2 >= 0 for nonnegative W."""
+    W = _rand_W(seed, n)
+    L = laplacian(W)
+    u = jax.random.normal(jax.random.PRNGKey(seed + 1), (n,))
+    quad = float(u @ L @ u)
+    direct = 0.5 * float(jnp.sum(W * (u[:, None] - u[None, :]) ** 2))
+    assert quad >= -1e-4 * max(direct, 1.0)
+    assert np.isclose(quad, direct, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_laplacian_annihilates_constants(seed):
+    W = _rand_W(seed, 16)
+    L = laplacian(W)
+    assert jnp.allclose(L @ jnp.ones(16), 0.0, atol=1e-4)
+
+
+def test_laplacian_matmul_matches_dense():
+    W = _rand_W(3, 20)
+    X = jax.random.normal(jax.random.PRNGKey(4), (20, 2))
+    assert jnp.allclose(laplacian_matmul(W, X), laplacian(W) @ X,
+                        rtol=1e-5, atol=1e-5)
+
+
+def test_knn_sparsify_limits():
+    W = _rand_W(5, 12)
+    assert jnp.allclose(knn_sparsify(W, 12), W)      # kappa >= N-1: unchanged
+    assert jnp.allclose(knn_sparsify(W, 0), 0.0)     # kappa = 0: empty
+    Wk = knn_sparsify(W, 3)
+    # at most 2*kappa nonzeros per row after max-symmetrization
+    nnz = jnp.sum(Wk > 0, axis=1)
+    assert jnp.all(nnz >= 1) and jnp.all(nnz <= 2 * 3 + 1)
+    assert jnp.allclose(Wk, Wk.T)
+
+
+@pytest.mark.parametrize("kappa", [0, 3, 7, 100])
+def test_sparsified_attractive_matrix_psd_and_limits(kappa):
+    """The paper's SD family: kappa=0 -> D+ (FP), kappa=N -> full L+."""
+    W = _rand_W(7, 14)
+    B = sparsified_attractive_matrix(W, kappa)
+    evals = np.linalg.eigvalsh(np.asarray(B, np.float64))
+    assert evals.min() >= -1e-5 * max(evals.max(), 1.0)
+    if kappa == 0:
+        assert jnp.allclose(B, jnp.diag(degree(W)), rtol=1e-6, atol=1e-6)
+    if kappa >= 13:
+        assert jnp.allclose(B, laplacian(W), rtol=1e-6, atol=1e-6)

@@ -1,0 +1,85 @@
+"""Faithfulness of the Laplacian-form energy/gradient (paper §1, eqs. 2-3).
+
+The analytic gradient 4 L(w) X must match jax.grad of the textbook energy to
+fp32 precision for every model family — this is the core identity the whole
+optimization framework rests on.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import energy_and_grad, gradient_weights, make_affinities
+from repro.core.objectives import direct_energy, is_normalized
+from repro.kernels.ref import KINDS
+from tests.conftest import three_loops
+
+LAMS = {"ee": 50.0, "ssne": 1.0, "tsne": 1.0, "tee": 10.0, "epan": 10.0}
+
+
+@pytest.fixture(scope="module")
+def setup():
+    Y = three_loops(n_per=20, loops=3, dim=10)
+    affs = {k: make_affinities(Y, 10.0, model=k) for k in KINDS}
+    X = jax.random.normal(jax.random.PRNGKey(1), (Y.shape[0], 2)) * 0.5
+    return affs, X
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_energy_matches_direct(setup, kind):
+    affs, X = setup
+    E, _ = energy_and_grad(X, affs[kind], kind, LAMS[kind])
+    E_direct = direct_energy(X, affs[kind], kind, LAMS[kind])
+    assert jnp.allclose(E, E_direct, rtol=1e-5)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_laplacian_gradient_matches_autodiff(setup, kind):
+    affs, X = setup
+    _, G = energy_and_grad(X, affs[kind], kind, LAMS[kind])
+    G_ad = jax.grad(direct_energy)(X, affs[kind], kind, LAMS[kind])
+    rel = jnp.linalg.norm(G - G_ad) / jnp.maximum(jnp.linalg.norm(G_ad), 1e-30)
+    assert float(rel) < 1e-4
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_gradient_weights_identity(setup, kind):
+    """grad == 4 L(w) X with the paper's printed per-model weights."""
+    affs, X = setup
+    w = gradient_weights(X, affs[kind], kind, LAMS[kind])
+    L_X = jnp.sum(w, axis=1)[:, None] * X - w @ X
+    _, G = energy_and_grad(X, affs[kind], kind, LAMS[kind])
+    assert jnp.allclose(4.0 * L_X, G, rtol=2e-3, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), kind=st.sampled_from(sorted(KINDS)))
+def test_shift_invariance(seed, kind):
+    """E depends on X only through pairwise distances (paper §1)."""
+    Y = three_loops(n_per=12, loops=2, dim=6, seed=seed % 7)
+    aff = make_affinities(Y, 6.0, model=kind)
+    X = jax.random.normal(jax.random.PRNGKey(seed), (Y.shape[0], 2))
+    shift = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, 2)) * 5
+    E1, _ = energy_and_grad(X, aff, kind, LAMS[kind])
+    E2, _ = energy_and_grad(X + shift, aff, kind, LAMS[kind])
+    assert jnp.allclose(E1, E2, rtol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_rotation_invariance(seed):
+    Y = three_loops(n_per=12, loops=2, dim=6, seed=seed % 5)
+    aff = make_affinities(Y, 6.0, model="ee")
+    X = jax.random.normal(jax.random.PRNGKey(seed), (Y.shape[0], 2))
+    th = float(seed) * 0.1
+    R = jnp.array([[jnp.cos(th), -jnp.sin(th)], [jnp.sin(th), jnp.cos(th)]])
+    E1, _ = energy_and_grad(X, aff, "ee", 50.0)
+    E2, _ = energy_and_grad(X @ R, aff, "ee", 50.0)
+    assert jnp.allclose(E1, E2, rtol=1e-3)
+
+
+def test_normalized_flags():
+    assert is_normalized("ssne") and is_normalized("tsne")
+    assert not is_normalized("ee") and not is_normalized("tee")
+    with pytest.raises(ValueError):
+        is_normalized("bogus")

@@ -1,0 +1,79 @@
+"""Roofline module: param counts, MODEL_FLOPS, term formation."""
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.launch import roofline as rl
+
+
+def test_param_counts_match_known_sizes():
+    """Sanity vs published parameter counts (within 15% — embeddings and
+    small tensors are approximated)."""
+    known = {
+        "yi-34b": 34e9,
+        "qwen2-7b": 7e9,
+        "nemotron-4-340b": 340e9,
+        "grok-1-314b": 314e9,
+        "musicgen-medium": 1.5e9,
+        "rwkv6-7b": 7e9,
+    }
+    for arch, expect in known.items():
+        cfg = get_config(arch)
+        n = rl.total_params(cfg)
+        # exclude embeddings from expectation tolerance; counts are
+        # non-embedding params, so allow a wider band for small models
+        assert 0.6 * expect < n < 1.25 * expect, (arch, n, expect)
+
+
+def test_moe_active_far_below_total():
+    cfg = get_config("llama4-maverick-400b-a17b")
+    assert rl.active_params(cfg) < 0.15 * rl.total_params(cfg)
+    cfg = get_config("grok-1-314b")
+    assert rl.active_params(cfg) < 0.45 * rl.total_params(cfg)
+
+
+def test_model_flops_modes():
+    cfg = get_config("yi-34b")
+    t = rl.model_flops_for(cfg, SHAPES["train_4k"])
+    p = rl.model_flops_for(cfg, SHAPES["prefill_32k"])
+    d = rl.model_flops_for(cfg, SHAPES["decode_32k"])
+    # train = 6ND on 1.05M tokens; prefill = 2ND on the same token count
+    assert t / p == pytest.approx(3.0, rel=1e-6)
+    # decode: one token per sequence
+    assert d == pytest.approx(2 * rl.active_params(cfg) * 128, rel=1e-6)
+
+
+def test_collective_bytes_parser():
+    hlo = """
+HloModule test
+
+ENTRY %main (p0: f32[16,512]) -> f32[16,512] {
+  %p0 = f32[16,512]{1,0} parameter(0)
+  %copy = f32[16,512]{1,0} copy(%p0)
+  %all-gather.1 = f32[16,1024]{1,0} all-gather(%copy), dimensions={1}
+  %slice = f32[16,512]{1,0} slice(%all-gather.1), slice={[0:16],[0:512]}
+  ROOT %all-reduce.1 = f32[16,512]{1,0} all-reduce(%slice)
+}
+"""
+    from repro.launch.hlo_cost import analyze_text
+    c = analyze_text(hlo)
+    assert c.collective_bytes["all-gather"] == 16 * 512 * 4
+    assert c.collective_bytes["all-reduce"] == 16 * 512 * 4
+
+
+def test_terms_and_dominance():
+    class FakeCompiled:
+        def as_text(self):
+            return """
+HloModule t
+
+ENTRY %main (a: f32[1024,1024], b: f32[1024,1024]) -> f32[1024,1024] {
+  %a = f32[1024,1024]{1,0} parameter(0)
+  %b = f32[1024,1024]{1,0} parameter(1)
+  ROOT %dot.1 = f32[1024,1024]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    r = rl.analyze(FakeCompiled(), n_chips=256, model_flops=2 * 1024 ** 3)
+    assert r.flops_per_chip == pytest.approx(2 * 1024 ** 3, rel=0.01)
+    assert r.dominant in ("compute", "memory")
+    assert r.compute_s == pytest.approx(r.flops_per_chip / rl.PEAK_FLOPS)

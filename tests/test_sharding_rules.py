@@ -1,0 +1,61 @@
+"""Sharding rule engine: divisibility fallbacks, axis reuse, FSDP expansion.
+Uses abstract meshes (no forced devices needed: AbstractMesh shapes only)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, AxisType, PartitionSpec as P
+
+from repro.distributed.sharding import fsdp_axes, spec_for
+
+SINGLE = AbstractMesh((16, 16), ("data", "model"),
+                      axis_types=(AxisType.Auto,) * 2)
+MULTI = AbstractMesh((2, 16, 16), ("pod", "data", "model"),
+                     axis_types=(AxisType.Auto,) * 3)
+
+
+def test_fsdp_axes():
+    assert fsdp_axes(SINGLE) == ("data",)
+    assert fsdp_axes(MULTI) == ("pod", "data")
+
+
+def test_embed_shards_over_fsdp():
+    s = spec_for(SINGLE, ("embed", "mlp"), (8192, 28672))
+    assert s == P(("data",), "model")
+    s = spec_for(MULTI, ("embed", "mlp"), (8192, 28672))
+    assert s == P(("pod", "data"), "model")
+
+
+def test_non_divisible_dims_stay_replicated():
+    # yi-34b: 56 q-heads on a 16-way model axis — flattened q_heads divides
+    s = spec_for(SINGLE, ("embed", "q_heads"), (7168, 56 * 128))
+    assert s == P(("data",), "model")
+    # but a bare head count of 56 would not
+    s = spec_for(SINGLE, (None, "q_heads"), (1, 56))
+    assert s == P(None, None)
+
+
+def test_axis_not_reused_within_tensor():
+    # grok experts=8 can't take model(16); mlp takes it instead
+    s = spec_for(SINGLE, ("experts", "embed", "mlp"), (8, 6144, 32768))
+    assert s == P(None, ("data",), "model")
+    # llama4 experts=128 divides: experts take model, mlp stays unsharded
+    s = spec_for(SINGLE, ("experts", "embed", "mlp"), (128, 5120, 8192))
+    assert s == P("model", ("data",), None)
+
+
+def test_vocab_sharding():
+    for v in (128256, 64000, 152064, 256000, 92416, 2048, 65536, 32000,
+              202048, 131072):
+        s = spec_for(SINGLE, ("vocab", "embed"), (v, 4096))
+        assert s[0] == "model", v
+
+
+def test_batch_one_not_sharded():
+    s = spec_for(MULTI, ("batch", None, "kv_heads", None), (1, 10, 32, 64))
+    assert s[0] is None
+    assert s[2] == "model"
+
+
+def test_layers_never_sharded():
+    s = spec_for(SINGLE, ("layers", "embed", "mlp"), (48, 4096, 16384))
+    assert s == P(None, ("data",), "model")

@@ -1,0 +1,27 @@
+"""Laplacian-eigenmaps initialization."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import laplacian_eigenmaps, make_affinities
+from tests.conftest import three_loops
+
+
+def test_eigenmaps_shape_and_gauge():
+    Y = three_loops(n_per=16, loops=2, dim=8)
+    aff = make_affinities(Y, 8.0, model="ee")
+    X = laplacian_eigenmaps(aff.Wp, 2)
+    assert X.shape == (Y.shape[0], 2)
+    assert np.all(np.isfinite(np.asarray(X)))
+    assert np.allclose(np.asarray(jnp.mean(X, axis=0)), 0.0, atol=1e-4)
+    assert np.allclose(np.asarray(jnp.std(X, axis=0)), 1.0, atol=1e-3)
+
+
+def test_eigenmaps_separates_components():
+    """Two disconnected loops must land in distinct 1D positions."""
+    Y = three_loops(n_per=16, loops=2, dim=8)
+    aff = make_affinities(Y, 6.0, model="ee")
+    X = laplacian_eigenmaps(aff.Wp, 2)
+    a, b = np.asarray(X[:16]), np.asarray(X[16:])
+    # cluster means are separated in at least one eigen-coordinate
+    sep = np.abs(a.mean(0) - b.mean(0)).max()
+    assert sep > 0.5
