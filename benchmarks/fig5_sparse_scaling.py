@@ -1,0 +1,158 @@
+"""Fig. 5 (beyond-paper): dense vs sparse pipeline scaling in N.
+
+Sweeps N over {2k, 10k, 50k} (container default) and reports, per N:
+
+  * graph/affinity build time (dense perplexity calibration vs k-NN + ELL
+    calibration),
+  * per-iteration wall-clock of the optimization step (energy + gradient +
+    spectral-direction solve), dense (O(N^2 d), Cholesky backsolves) vs
+    sparse (O(N (k + m) d), Jacobi-CG),
+  * final (surrogate) energy after `iters` steps.
+
+The dense path is SKIPPED above `dense_cutoff` (default 5k: the dense
+pipeline holds several f32 (N, N) arrays — affinities, B, its Cholesky
+factor — ~1.6 GB at N=10k, plus an O(N^3) factorization on one CPU core)
+— exactly the wall the sparse subsystem removes.  The sparse
+per-iteration time should scale ~linearly in N (acceptance: the measured
+scaling exponent over the sweep stays near 1, far from quadratic).
+
+    PYTHONPATH=src python -m benchmarks.fig5_sparse_scaling [--ns 2000,10000,50000]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (SD, LSConfig, energy_and_grad_sparse,
+                        make_affinities, minimize)
+from repro.data import mnist_like
+from repro.sparse import make_sd_operator, pcg, sparse_affinities
+
+from .common import csv_row
+
+Array = jnp.ndarray
+
+
+def dense_point(Y: Array, kind: str, lam: float, iters: int,
+                perplexity: float) -> dict:
+    t0 = time.perf_counter()
+    aff = jax.block_until_ready(make_affinities(Y, perplexity, model=kind))
+    t_build = time.perf_counter() - t0
+    n = Y.shape[0]
+    X0 = 1e-2 * jax.random.normal(jax.random.PRNGKey(0), (n, 2))
+    res = minimize(X0, aff, kind, lam, SD(), max_iters=iters, tol=0.0,
+                   ls_cfg=LSConfig(init_step="adaptive_grow"))
+    # steady-state per-iteration time: drop the compile-heavy first step
+    t_iter = float(np.diff(res.times[1:]).mean()) if iters > 2 else \
+        float(res.times[-1] / max(res.n_iters, 1))
+    return {"build_s": t_build, "setup_s": res.setup_time,
+            "iter_s": t_iter, "energy": float(res.energies[-1])}
+
+
+def sparse_point(Y: Array, kind: str, lam: float, iters: int,
+                 perplexity: float, k: int, m: int) -> dict:
+    n = Y.shape[0]
+    t0 = time.perf_counter()
+    saff = jax.block_until_ready(sparse_affinities(
+        Y, k=k, perplexity=perplexity, model=kind))
+    t_build = time.perf_counter() - t0
+
+    matvec, inv_diag, _ = make_sd_operator(saff.graph, saff.rev)
+    lam_ = jnp.asarray(lam, jnp.float32)
+
+    @jax.jit
+    def step(X, P, key):
+        E, G = energy_and_grad_sparse(X, saff, kind, lam_,
+                                      n_negatives=m, key=key)
+        P = pcg(matvec, -G, P, inv_diag=inv_diag, tol=1e-3, maxiter=50).x
+        # fixed small step for timing purposes (the trainer line-searches)
+        xc = X - jnp.mean(X, axis=0, keepdims=True)
+        scale = jnp.sqrt(jnp.mean(xc * xc)) + 1e-3
+        alpha = jnp.minimum(
+            1.0, scale / (jnp.sqrt(jnp.mean(P * P)) + 1e-30))
+        return X + alpha * P, P, E
+
+    X = 1e-2 * jax.random.normal(jax.random.PRNGKey(0), (n, 2))
+    P = jnp.zeros_like(X)
+    key0 = jax.random.PRNGKey(1)
+    X, P, E = jax.block_until_ready(step(X, P, key0))   # compile + iter 1
+    t_setup = 0.0
+    t0 = time.perf_counter()
+    for it in range(1, iters):
+        X, P, E = step(X, P, jax.random.fold_in(key0, it))
+    jax.block_until_ready(X)
+    t_iter = (time.perf_counter() - t0) / max(iters - 1, 1)
+    return {"build_s": t_build, "setup_s": t_setup,
+            "iter_s": t_iter, "energy": float(E)}
+
+
+def run(ns=(2000, 10_000, 50_000), kind="ee", lam=100.0, iters=10,
+        perplexity=10.0, k=30, m=5, dense_cutoff=5000, dim=64,
+        out_json=None):
+    # keep k >= 3 * perplexity: with fewer candidates the entropy target
+    # log(perplexity) is unreachable and the sparse calibration degenerates
+    # to uniform, making the dense/sparse energy columns incomparable
+    assert k >= perplexity, (k, perplexity)
+    results = {}
+    for n in ns:
+        Y, _ = mnist_like(n=n, dim=dim)
+        Y = jnp.asarray(Y)
+        row = {}
+        if n <= dense_cutoff:
+            row["dense"] = dense_point(Y, kind, lam, iters, perplexity)
+            csv_row("fig5", kind, "dense", n,
+                    f"{row['dense']['build_s']:.2f}",
+                    f"{row['dense']['iter_s']:.4f}",
+                    f"{row['dense']['energy']:.6g}")
+        else:
+            csv_row("fig5", kind, "dense", n, "skipped", "oom-cutoff", "")
+        row["sparse"] = sparse_point(Y, kind, lam, iters, perplexity, k, m)
+        csv_row("fig5", kind, "sparse", n,
+                f"{row['sparse']['build_s']:.2f}",
+                f"{row['sparse']['iter_s']:.4f}",
+                f"{row['sparse']['energy']:.6g}")
+        results[n] = row
+    # linear-scaling figure of merit over the sparse sweep
+    ns_run = sorted(results)
+    if len(ns_run) >= 2:
+        n0, n1 = ns_run[0], ns_run[-1]
+        t0, t1 = results[n0]["sparse"]["iter_s"], results[n1]["sparse"]["iter_s"]
+        csv_row("fig5", kind, "sparse-scaling-exponent", f"{n0}->{n1}",
+                f"{np.log(max(t1, 1e-9) / max(t0, 1e-9)) / np.log(n1 / n0):.2f}")
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(results, f)
+    return results
+
+
+def _ns_list(s: str) -> tuple[int, ...]:
+    try:
+        return tuple(int(x) for x in s.split(","))
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"--ns wants a comma-separated list of ints, got {s!r}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ns", type=_ns_list, default=(2000, 10_000, 50_000))
+    ap.add_argument("--kind", default="ee")
+    ap.add_argument("--lam", type=float, default=100.0)
+    ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--k", type=int, default=30)
+    ap.add_argument("--perplexity", type=float, default=10.0)
+    ap.add_argument("--m", type=int, default=5)
+    ap.add_argument("--dense-cutoff", type=int, default=5000)
+    ap.add_argument("--out", default=None)
+    a = ap.parse_args()
+    run(ns=a.ns, kind=a.kind, lam=a.lam, iters=a.iters, k=a.k, m=a.m,
+        perplexity=a.perplexity, dense_cutoff=a.dense_cutoff, out_json=a.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -14,17 +14,27 @@ import sys
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import (fig1_learning_curves, fig2_random_inits,
-                        fig3_homotopy, fig4_large, sd_overhead)
+                        fig3_homotopy, fig4_large, fig5_sparse_scaling,
+                        sd_overhead)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale Ns (hours on this container)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal CI subset (~1 min): tiny fig1 + fig5")
     a, _ = ap.parse_known_args()
 
     os.makedirs("results", exist_ok=True)
     print("table,fields...,derived")
+    if a.smoke:
+        fig1_learning_curves.run(n_per=16, loops=3, iters=10,
+                                 out_json="results/fig1.json")
+        fig5_sparse_scaling.run(ns=(256, 1024), iters=5, k=10, m=5,
+                                perplexity=3.0, dense_cutoff=512,
+                                out_json="results/fig5.json")
+        return
     if a.full:
         fig1_learning_curves.run(n_per=72, loops=10, iters=400,
                                  out_json="results/fig1.json")
@@ -36,6 +46,8 @@ def main() -> None:
         fig4_large.run(n=20_000, budget_s=3600.0, kappa=7,
                        out_json="results/fig4.json")
         sd_overhead.run(ns=(1000, 5000, 20_000))
+        fig5_sparse_scaling.run(ns=(2000, 10_000, 50_000), iters=10,
+                                out_json="results/fig5.json")
     else:
         fig1_learning_curves.run(n_per=36, loops=6, iters=60,
                                  out_json="results/fig1.json")
@@ -49,6 +61,9 @@ def main() -> None:
         fig4_large.run(n=1200, budget_s=10.0,
                        out_json="results/fig4.json")
         sd_overhead.run(ns=(500, 1000))
+        fig5_sparse_scaling.run(ns=(1000, 4000), iters=8,
+                                dense_cutoff=2000,
+                                out_json="results/fig5.json")
     # roofline table if a dry-run sweep exists
     if os.path.exists("results/dryrun.jsonl"):
         from benchmarks import roofline_report

@@ -18,12 +18,13 @@ from .objectives import (
     direct_energy,
     energy,
     energy_and_grad,
+    energy_and_grad_sparse,
     grad,
     gradient_weights,
     is_normalized,
 )
 from .spectral_init import laplacian_eigenmaps
-from .strategies import DiagH, FP, GD, SD, SDMinus, make_strategy
+from .strategies import DiagH, FP, GD, SD, SDMinus, SparseSD, make_strategy
 
 __all__ = [
     "Affinities", "make_affinities", "sne_affinities",
@@ -32,7 +33,8 @@ __all__ = [
     "HomotopyResult", "homotopy_path",
     "LSConfig", "MinimizeResult", "minimize",
     "NORMALIZED", "attractive_weights", "direct_energy", "energy",
-    "energy_and_grad", "grad", "gradient_weights", "is_normalized",
+    "energy_and_grad", "energy_and_grad_sparse", "grad", "gradient_weights",
+    "is_normalized",
     "laplacian_eigenmaps",
-    "DiagH", "FP", "GD", "SD", "SDMinus", "make_strategy",
+    "DiagH", "FP", "GD", "SD", "SDMinus", "SparseSD", "make_strategy",
 ]

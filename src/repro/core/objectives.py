@@ -20,8 +20,10 @@ analytic gradient against jax.grad in tests.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any
 
+import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
@@ -109,6 +111,111 @@ def gradient_weights(X: Array, aff: Affinities, kind: str, lam) -> Array:
     if kind == "epan":
         return Wp - lam * Wm * (t < 1.0).astype(X.dtype)
     raise ValueError(f"unknown kind {kind!r}")
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kind", "n_negatives", "with_grad"))
+def energy_and_grad_sparse(
+    X: Array,
+    saff,                      # sparse.SparseAffinities
+    kind: str,
+    lam,
+    *,
+    n_negatives: int | None = 5,
+    key: Array | None = None,
+    with_grad: bool = True,
+) -> tuple[Array, Array | None]:
+    """O(N (k + m) d) energy/gradient for the unnormalized models.
+
+    Attractive side: exact, over the calibrated ELL graph (the implicit
+    symmetric W+ = (A + A^T)/2; sparse/linalg.py).  For every unnormalized
+    kind the attractive gradient weights equal W+ itself (kernels/ref.py
+    contract: a = Wa), so grad+ = 4 L(W+) X with no X-dependent reweighting.
+
+    Repulsive side: W- = 1 off-diagonal, estimated by CYCLIC-SHIFT negative
+    sampling with the unnormalized-model correction: m distinct shifts
+    s_1..s_m are drawn uniformly from {1..N-1} and row n's negatives are
+    {(n + s_j) mod N}.  Marginally every ordered pair (n, p != n) is
+    sampled with probability m/(N-1), so scaling per-pair terms by (N-1)/m
+    gives E[s_hat] = s and E[L(b_hat) X] = L(b) X in ABSOLUTE scale —
+    required because unnormalized models couple lam to s itself, not to
+    the ratio s / E[s] (the paper's lambda-homotopy).  The shift structure
+    makes the transpose of the sampled edge set just the negated shifts,
+    so the symmetric application — which keeps the estimator exactly
+    translation-invariant (columns of G sum to 0) — is pure gathers; no
+    scatter anywhere in the energy/gradient path (XLA CPU scatter is
+    orders of magnitude slower than gather at these sizes).
+
+    `n_negatives=None` (or >= N-1) uses ALL N-1 shifts, enumerating every
+    ordered pair exactly once — the deterministic exact mode the
+    dense-parity tests rely on.
+
+    Normalized models (ssne/tsne) need a ratio estimator for lam/s and are
+    deliberately not supported here (ROADMAP open item).
+    """
+    from repro.sparse.linalg import sym_lap_matvec
+
+    if is_normalized(kind):
+        raise ValueError(
+            f"energy_and_grad_sparse supports unnormalized kinds only "
+            f"(got {kind!r}); normalized models need a ratio estimator")
+    g = saff.graph
+    rev = getattr(saff, "rev", None)
+    n = X.shape[0]
+
+    # attractive: exact over the ELL edges.  sum_nm W+_nm t_nm equals the
+    # directed sum (t is symmetric), so no transpose pass is needed for E.
+    t_att = jnp.sum((X[:, None, :] - X[g.indices]) ** 2, axis=-1)  # (N, k)
+    e_plus = jnp.sum(g.weights * t_att)
+    # with_grad=False is the line-search fast path: the energy needs only
+    # e_plus and s_hat, none of the Laplacian products
+    la_x = sym_lap_matvec(g, X, rev=rev) if with_grad else None
+
+    # repulsive: cyclic-shift negatives (all N-1 shifts when exhaustive)
+    if n_negatives is None or n_negatives >= n - 1:
+        shifts = jnp.arange(1, n, dtype=jnp.int32)
+        scale = 1.0
+    else:
+        if key is None:
+            raise ValueError("sampled negatives need a PRNG key")
+        shifts = 1 + jax.random.choice(
+            key, n - 1, shape=(n_negatives,), replace=False).astype(jnp.int32)
+        scale = (n - 1) / n_negatives
+    rows = jnp.arange(n, dtype=jnp.int32)[:, None]
+    J = (rows + shifts[None, :]) % n                           # (N, m)
+
+    t_neg = jnp.sum((X[:, None, :] - X[J]) ** 2, axis=-1)      # (N, m)
+    if kind == "ee":
+        s_pair = jnp.exp(-t_neg)
+        b = s_pair
+    elif kind == "tee":
+        K = 1.0 / (1.0 + t_neg)
+        s_pair = K
+        b = K * K
+    elif kind == "epan":
+        s_pair = jnp.maximum(1.0 - t_neg, 0.0)
+        b = (t_neg < 1.0).astype(X.dtype)
+    else:  # pragma: no cover - every unnormalized kind handled above
+        raise ValueError(f"unhandled kind {kind!r}")
+
+    s_hat = scale * jnp.sum(s_pair)
+    E = e_plus + lam * s_hat
+    if not with_grad:
+        return E, None
+
+    # symmetric Laplacian product over the sampled edges, gather-only:
+    # forward slot j is shift +s_j with weights b[:, j]; the transpose is
+    # shift -s_j carrying the SAME per-edge weight, read at the source row.
+    Jr = (rows - shifts[None, :]) % n                          # (N, m)
+    b_rev = b[Jr, jnp.arange(shifts.shape[0])[None, :]]        # (N, m)
+    fwd = (jnp.sum(b, axis=1, keepdims=True) * X
+           - jnp.einsum("nm,nmd->nd", b, X[J]))
+    bwd = (jnp.sum(b_rev, axis=1, keepdims=True) * X
+           - jnp.einsum("nm,nmd->nd", b_rev, X[Jr]))
+    lb_x = 0.5 * scale * (fwd + bwd)
+
+    G = 4.0 * (la_x - lam * lb_x)
+    return E, G
 
 
 def attractive_weights(aff: Affinities, kind: str) -> Array:

@@ -170,12 +170,89 @@ class SDMinus:
         return P, {**state, "prev_P": P}
 
 
+@dataclasses.dataclass(frozen=True)
+class SparseSD:
+    """Spectral direction from ELL storage: no (N, N) array, no Cholesky.
+
+    B = 4 (D+ - W+_k) + mu I applied matrix-free over the neighbor graph
+    (sparse/linalg.py), solved by Jacobi-preconditioned CG warm-started
+    from the previous direction.  Accepts either a `sparse.SparseAffinities`
+    (the native large-N path: the graph IS the attractive graph, D+ its
+    degree) or a dense `Affinities` (converted by per-row top-k; D+ stays
+    the FULL degree, preserving the paper's kappa semantics where k = 0
+    degenerates to FP and k = N-1 recovers the exact spectral direction).
+
+    Each iteration costs O(cg_iters * N * k * d) — the same order as the
+    sparse gradient itself — versus SD's O(N^2 d) backsolves.
+    """
+
+    name: str = "SparseSD"
+    k: int = -1                  # ELL width for dense conversion; -1 => N-1
+    mu_scale: float | None = 1e-5
+    cg_tol: float = 1e-3
+    cg_maxiter: int = 100
+
+    def init(self, X0, aff, kind: str, lam) -> State:
+        from repro.sparse.graph import NeighborGraph, from_dense, reverse_graph
+        from repro.sparse.linalg import sym_degree
+
+        if hasattr(aff, "graph"):                 # SparseAffinities
+            g = aff.graph
+            rev = aff.rev if getattr(aff, "rev", None) is not None \
+                else reverse_graph(g)
+            dfull = sym_degree(g)
+        else:
+            Wp = attractive_weights(aff, kind)
+            n = Wp.shape[0]
+            if self.k == 0:
+                # FP limit: an all-padding graph (L = 0), so B = 4 D+ + mu I
+                g = NeighborGraph(
+                    indices=jnp.arange(n, dtype=jnp.int32)[:, None],
+                    weights=jnp.zeros((n, 1), Wp.dtype))
+            else:
+                g = from_dense(Wp, self.k if self.k > 0 else n - 1)
+            rev = reverse_graph(g)
+            dfull = degree(Wp)                    # paper's kappa semantics
+        dsym = sym_degree(g)
+        bd = 4.0 * dfull
+        if self.mu_scale is None:
+            mu = 1e-10 * jnp.min(bd)              # paper's setting
+        else:
+            mu = jnp.maximum(1e-10 * jnp.min(bd),
+                             self.mu_scale * jnp.mean(bd))
+        # B v = 4 L(W+_k) v + resid v + mu v; resid >= 0 keeps B pd when
+        # the sparsified graph drops degree mass (cf. laplacian.py).
+        resid = 4.0 * jnp.maximum(dfull - dsym, 0.0)
+        return {
+            "indices": g.indices, "weights": g.weights,
+            "rev_indices": rev.indices, "rev_weights": rev.weights,
+            "shift": resid + mu, "inv_diag": 1.0 / (4.0 * dsym + resid + mu),
+            "prev_P": jnp.zeros_like(X0),
+        }
+
+    def direction(self, state, X, G, aff, kind, lam):
+        from repro.sparse.graph import NeighborGraph
+        from repro.sparse.linalg import pcg, sym_lap_matvec
+
+        g = NeighborGraph(state["indices"], state["weights"])
+        rev = NeighborGraph(state["rev_indices"], state["rev_weights"])
+        shift = state["shift"]
+
+        def matvec(V):
+            return 4.0 * sym_lap_matvec(g, V, rev=rev) + shift[:, None] * V
+
+        res = pcg(matvec, -G, state["prev_P"], inv_diag=state["inv_diag"],
+                  tol=self.cg_tol, maxiter=self.cg_maxiter)
+        return res.x, {**state, "prev_P": res.x}
+
+
 STRATEGIES = {
     "gd": GD,
     "fp": FP,
     "diagh": DiagH,
     "sd": SD,
     "sd-": SDMinus,
+    "sparsesd": SparseSD,
 }
 
 

@@ -38,6 +38,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.objectives import is_normalized
 
+# jax >= 0.6 promotes shard_map to the top-level namespace; older releases
+# (the container pins 0.4.37) keep it in jax.experimental.
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # pragma: no cover - exercised on old jax only
+    from jax.experimental.shard_map import shard_map
+
 Array = jnp.ndarray
 
 
@@ -52,11 +59,19 @@ class EmbedMeshSpec:
         return self.row_axes + (self.col_axis,)
 
 
+def _axis_size(ax: str):
+    """jax.lax.axis_size is a recent addition; psum(1) is the portable
+    spelling of "size of this named axis" inside shard_map."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(ax)
+    return jax.lax.psum(1, ax)
+
+
 def _row_index(spec: EmbedMeshSpec) -> Array:
     """Linear row-block index of this device across the row axes."""
     idx = jnp.asarray(0, jnp.int32)
     for ax in spec.row_axes:
-        idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        idx = idx * _axis_size(ax) + jax.lax.axis_index(ax)
     return idx
 
 
@@ -157,13 +172,13 @@ def make_distributed_energy_grad(mesh: Mesh, spec: EmbedMeshSpec, kind: str,
 
     w_spec = P(spec.row_axes, spec.col_axis)
     if unit_wm:
-        f = jax.shard_map(
+        f = shard_map(
             lambda X, Wp, lam: core(X, Wp, None, lam), mesh=mesh,
             in_specs=(P(), w_spec, P()),
             out_specs=(P(), P(spec.row_axes, None)),
         )
     else:
-        f = jax.shard_map(
+        f = shard_map(
             core, mesh=mesh,
             in_specs=(P(), w_spec, w_spec, P()),
             out_specs=(P(), P(spec.row_axes, None)),
@@ -211,7 +226,7 @@ def make_block_jacobi_setup(mesh: Mesh, spec: EmbedMeshSpec,
         return jnp.linalg.cholesky(B)
 
     w_spec = P(spec.row_axes, spec.col_axis)
-    f = jax.shard_map(
+    f = shard_map(
         body, mesh=mesh,
         in_specs=(w_spec,),
         out_specs=P(spec.row_axes, None),
@@ -225,7 +240,7 @@ def make_block_jacobi_solve(mesh: Mesh, spec: EmbedMeshSpec):
     def body(R, G):
         return -jsl.cho_solve((R, True), G)
 
-    f = jax.shard_map(
+    f = shard_map(
         body, mesh=mesh,
         in_specs=(P(spec.row_axes, None), P(spec.row_axes, None)),
         out_specs=P(spec.row_axes, None),

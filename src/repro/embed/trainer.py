@@ -5,6 +5,12 @@ with checkpoint/restart.
 On the production mesh the N x N affinities are 2-D sharded and the solve is
 block-Jacobi (DESIGN.md §3.4); on a single device the same code runs with a
 (1, 1) mesh, which is how the CPU tests exercise every code path.
+
+`EmbedConfig(sparse=True)` switches to the O(N (k + m) d) neighbor-graph
+pipeline (docs/sparse.md): k-NN affinities in ELL storage, negative-sampled
+repulsion, and a matrix-free Jacobi-CG spectral direction — no (N, N) array
+anywhere, which is what unlocks N >> 10^4.  The sparse path currently runs
+on one device (multi-device sparse sharding is a ROADMAP open item).
 """
 from __future__ import annotations
 
@@ -18,8 +24,10 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.ckpt import Checkpointer
-from repro.core import laplacian_eigenmaps, make_affinities
+from repro.core import (energy_and_grad_sparse, is_normalized,
+                        laplacian_eigenmaps, make_affinities)
 from repro.core.linesearch import LSConfig
+from repro.sparse import make_sd_operator, pcg, sparse_affinities, to_dense
 
 from .distributed import (
     EmbedMeshSpec,
@@ -49,6 +57,47 @@ class EmbedConfig:
     checkpoint_dir: str | None = None
     checkpoint_every: int = 50
     seed: int = 0
+    # sparse neighbor-graph pipeline (docs/sparse.md)
+    sparse: bool = False
+    n_neighbors: int = 0         # ELL width k; 0 => auto (3 * perplexity).
+                                 # k < perplexity is rejected: the k-candidate
+                                 # entropy can't reach log(perplexity) and the
+                                 # calibration would degenerate to uniform.
+    n_negatives: int = 5         # uniform negative samples per point
+    knn_method: str = "auto"     # 'exact' | 'approx' | 'auto'
+    cg_tol: float = 1e-3
+    cg_maxiter: int = 100
+
+
+def _initial_step(X, P, alpha_prev: float, ls: LSConfig) -> float:
+    """Adaptive-grow initial trial step with the trust cap, as in
+    core.minimize (host-side mirror for the trainer's python loops)."""
+    alpha0 = min(alpha_prev / ls.rho, 1.0)
+    if ls.max_rel_move is not None:
+        xc = X - jnp.mean(X, axis=0, keepdims=True)
+        scale = float(jnp.sqrt(jnp.mean(xc * xc))) + 1e-3
+        p_rms = float(jnp.sqrt(jnp.mean(P * P))) + 1e-30
+        alpha0 = min(alpha0, ls.max_rel_move * scale / p_rms)
+    return alpha0
+
+
+def _host_backtrack(energy_of, X, e0: float, G, P, alpha0: float,
+                    ls: LSConfig) -> tuple[float, float]:
+    """Armijo backtracking with host-side floats (one energy eval per
+    trial); shared by the dense and sparse fit loops.  Returns the
+    accepted (alpha, E(X + alpha P)) — the energy is always evaluated AT
+    the accepted alpha, including on backtrack exhaustion (where alpha
+    shrinks once more after the last failed trial)."""
+    gtp = float(jnp.vdot(G, P))
+    alpha = alpha0
+    for _ in range(ls.max_backtracks):
+        e_new = energy_of(X + alpha * P)
+        if e_new <= e0 + ls.c1 * alpha * gtp:
+            break
+        alpha *= ls.rho
+    else:
+        e_new = energy_of(X + alpha * P)
+    return alpha, e_new
 
 
 @dataclasses.dataclass
@@ -95,6 +144,8 @@ class DistributedEmbedding:
             callback: Callable[[int, Array, float], None] | None = None
             ) -> FitResult:
         cfg = self.cfg
+        if cfg.sparse:
+            return self._fit_sparse(Y, X0, callback)
         Wp, Wm, X_init = self.prepare(Y)
         X = replicate(self.mesh, X0) if X0 is not None else X_init
         R = self._bj_setup(Wp)                     # block-Jacobi factors
@@ -143,23 +194,119 @@ class DistributedEmbedding:
         G_sh = shard_rows(self.mesh, self.spec, G)
         P = self._bj_solve(R, G_sh)
         P = replicate(self.mesh, P)
-        # initial trial step (adaptive-grow + trust cap, as in core.minimize)
-        alpha0 = min(alpha_prev / cfg.ls.rho, 1.0)
-        if cfg.ls.max_rel_move is not None:
-            xc = X - jnp.mean(X, axis=0, keepdims=True)
-            scale = float(jnp.sqrt(jnp.mean(xc * xc))) + 1e-3
-            p_rms = float(jnp.sqrt(jnp.mean(P * P))) + 1e-30
-            alpha0 = min(alpha0, cfg.ls.max_rel_move * scale / p_rms)
-        gtp = float(jnp.vdot(G, P))
-        alpha, e0 = alpha0, float(E)
-        e_new = None
-        for _ in range(cfg.ls.max_backtracks):
-            Xn = X + alpha * P
-            e_new, _ = self._eg(Xn, Wp, Wm, lam)
-            e_new = float(e_new)
-            if e_new <= e0 + cfg.ls.c1 * alpha * gtp:
-                break
-            alpha *= cfg.ls.rho
+        alpha0 = _initial_step(X, P, alpha_prev, cfg.ls)
+        alpha, _ = _host_backtrack(
+            lambda Xn: float(self._eg(Xn, Wp, Wm, lam)[0]),
+            X, float(E), G, P, alpha0, cfg.ls)
         X_new = X + alpha * P
         E_new, G_new = self._eg(X_new, Wp, Wm, lam)
         return X_new, E_new, G_new, alpha
+
+    # -- sparse pipeline ----------------------------------------------------
+    def _sparse_init(self, saff, n: int):
+        """Spectral init when a dense eigendecomposition is affordable,
+        random small-scale init above that (sparse eigenmaps: ROADMAP)."""
+        cfg = self.cfg
+        if n <= 2048:
+            A = to_dense(saff.graph)
+            return laplacian_eigenmaps(0.5 * (A + A.T), cfg.dim) * 0.1
+        key = jax.random.PRNGKey(cfg.seed)
+        return 1e-2 * jax.random.normal(key, (n, cfg.dim), dtype=jnp.float32)
+
+    def _fit_sparse(self, Y: Array, X0: Array | None,
+                    callback: Callable[[int, Array, float], None] | None
+                    ) -> FitResult:
+        """O(N (k + m) d) per iteration: ELL affinities, negative-sampled
+        repulsion, matrix-free Jacobi-CG spectral direction.
+
+        The repulsive energy is stochastic; each iteration fixes one PRNG
+        key, so the backtracking line search descends a deterministic
+        per-iteration surrogate (common random numbers).  Convergence is
+        tested on an exponential moving average of the surrogate energies
+        (a raw rel-change test would fire on sampling noise).
+        """
+        cfg = self.cfg
+        if is_normalized(cfg.kind):
+            # fail fast — energy_and_grad_sparse would only raise after the
+            # whole k-NN search + calibration + reverse-graph build
+            raise ValueError(
+                f"sparse=True supports unnormalized kinds only (got "
+                f"{cfg.kind!r}); normalized models need a ratio estimator "
+                f"(ROADMAP open item)")
+        n = Y.shape[0]
+        k = cfg.n_neighbors or min(int(3 * cfg.perplexity), n - 1)
+        if k < cfg.perplexity:
+            raise ValueError(
+                f"n_neighbors={k} < perplexity={cfg.perplexity}: the "
+                f"k-candidate entropy cannot reach log(perplexity), so the "
+                f"calibration would silently degenerate to uniform weights; "
+                f"use n_neighbors >= 3 * perplexity (or 0 for auto)")
+        lam = jnp.asarray(cfg.lam, jnp.float32)
+        saff = sparse_affinities(jnp.asarray(Y), k=k,
+                                 perplexity=cfg.perplexity, model=cfg.kind,
+                                 method=cfg.knn_method)
+        X = jnp.asarray(X0) if X0 is not None else self._sparse_init(saff, n)
+
+        matvec, inv_diag, _ = make_sd_operator(saff.graph, saff.rev,
+                                               cfg.mu_scale)
+
+        @jax.jit
+        def eg(X, key):
+            return energy_and_grad_sparse(
+                X, saff, cfg.kind, lam, n_negatives=cfg.n_negatives, key=key)
+
+        @jax.jit
+        def e_only(X, key):
+            # line-search trials need no gradient: ~half the work
+            return energy_and_grad_sparse(
+                X, saff, cfg.kind, lam, n_negatives=cfg.n_negatives, key=key,
+                with_grad=False)[0]
+
+        @jax.jit
+        def solve(G, P0):
+            return pcg(matvec, -G, P0, inv_diag=inv_diag,
+                       tol=cfg.cg_tol, maxiter=cfg.cg_maxiter).x
+
+        ckpt = (Checkpointer(cfg.checkpoint_dir)
+                if cfg.checkpoint_dir else None)
+        start_it, resumed_from = 0, None
+        if ckpt is not None:
+            latest = ckpt.latest_step()
+            if latest is not None:
+                X = ckpt.restore(latest, X)
+                start_it, resumed_from = latest, latest
+
+        key0 = jax.random.PRNGKey(cfg.seed + 1)
+        E, G = eg(X, jax.random.fold_in(key0, start_it))
+        energies = [float(E)]
+        times = [0.0]
+        alpha_prev, ema, P = 1.0, float(E), jnp.zeros_like(X)
+        t0 = time.perf_counter()
+        it = start_it
+        for it in range(start_it + 1, cfg.max_iters + 1):
+            key = jax.random.fold_in(key0, it)
+            E, G = eg(X, key)                    # this iteration's surrogate
+            P = solve(G, P)
+            alpha0 = _initial_step(X, P, alpha_prev, cfg.ls)
+            alpha, e_new = _host_backtrack(
+                lambda Xn: float(e_only(Xn, key)),
+                X, float(E), G, P, alpha0, cfg.ls)
+            X = X + alpha * P
+            alpha_prev = alpha
+            energies.append(e_new)
+            times.append(time.perf_counter() - t0)
+            if callback is not None:
+                callback(it, X, e_new)
+            if ckpt is not None and it % cfg.checkpoint_every == 0:
+                ckpt.save(it, X)
+            ema_new = 0.9 * ema + 0.1 * e_new
+            if abs(ema - ema_new) / max(abs(ema_new), 1e-30) < cfg.tol:
+                ema = ema_new
+                break
+            ema = ema_new
+        if ckpt is not None:
+            ckpt.save(it, X)
+        return FitResult(
+            X=X, energies=np.asarray(energies), times=np.asarray(times),
+            n_iters=it - start_it, resumed_from=resumed_from,
+        )

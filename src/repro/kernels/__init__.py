@@ -1,6 +1,7 @@
-# Pallas TPU kernels for the paper's O(N^2 d) pairwise hot spot, with
-# pure-jnp oracles (ref.py) and jit'd dispatch wrappers (ops.py).
+# Pallas TPU kernels for the paper's O(N^2 d) pairwise hot spot and the
+# O(N k d) sparse attractive term, with pure-jnp oracles (ref.py) and
+# jit'd dispatch wrappers (ops.py).
 from . import ops, ref
-from .ref import KINDS, PairwiseTerms
+from .ref import KINDS, PairwiseTerms, ell_lap_matvec_ref
 
-__all__ = ["ops", "ref", "KINDS", "PairwiseTerms"]
+__all__ = ["ops", "ref", "KINDS", "PairwiseTerms", "ell_lap_matvec_ref"]

@@ -20,7 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from .pairwise import pairwise_terms_pallas
-from .ref import KINDS, PairwiseTerms, pairwise_terms_ref
+from .ref import KINDS, PairwiseTerms, ell_lap_matvec_ref, pairwise_terms_ref
+from .sparse_attractive import ell_lap_matvec_pallas
 
 
 def _on_tpu() -> bool:
@@ -76,3 +77,45 @@ def pairwise_terms(
     return PairwiseTerms(
         la_x=t.la_x[:n, :d], lb_x=t.lb_x[:n, :d], e_plus=t.e_plus, s=t.s
     )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("use_pallas", "block_rows", "interpret", "lane"),
+)
+def ell_lap_matvec(
+    X: jnp.ndarray,          # (N, d)
+    indices: jnp.ndarray,    # (N, k) int32
+    weights: jnp.ndarray,    # (N, k)
+    *,
+    use_pallas: bool | None = None,
+    block_rows: int = 256,
+    interpret: bool | None = None,
+    lane: int = 128,
+) -> jnp.ndarray:
+    """Directed ELL Laplacian product L(A) X; see kernels/ref.py for the
+    contract.  Padding mirrors `pairwise_terms`:
+
+      * N is padded to a block multiple with zero-weight self-edge rows
+        (indices point at row 0, weights are 0 — exact-zero contribution
+        by the ELL padding invariant),
+      * d is padded to `lane` zero columns (changes nothing in the first
+        d output columns).
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return ell_lap_matvec_ref(X, indices, weights)
+
+    if interpret is None:
+        interpret = not _on_tpu()
+    n, d = X.shape
+    br = min(block_rows, max(8, n))
+    n_pad = -(-n // br) * br
+    dp = max(lane, d)
+    Xp = _pad_to(X.astype(jnp.float32), n_pad, dp)
+    idx_p = jnp.pad(indices.astype(jnp.int32), ((0, n_pad - n), (0, 0)))
+    w_p = _pad_to(weights.astype(jnp.float32), n_pad, weights.shape[1])
+    out = ell_lap_matvec_pallas(
+        Xp, idx_p, w_p, block_rows=br, interpret=interpret)
+    return out[:n, :d]

@@ -55,6 +55,18 @@ def _lap_matmul(W: Array, X: Array) -> Array:
     return jnp.sum(W, axis=-1)[:, None] * X - W @ X
 
 
+def ell_lap_matvec_ref(X: Array, indices: Array, weights: Array) -> Array:
+    """Oracle for the sparse attractive contract (sparse_attractive.py):
+    directed ELL Laplacian product
+
+        (L(A) X)_n = (sum_j w_nj) x_n - sum_j w_nj x_{i_nj}
+
+    with the padding invariant that a slot (indices[n,j] = n, w = 0)
+    contributes exactly zero.  Duplicate columns sum."""
+    deg = jnp.sum(weights, axis=-1, keepdims=True)
+    return deg * X - jnp.einsum("nk,nkd->nd", weights, X[indices])
+
+
 def pairwise_terms_ref(X: Array, Wa: Array, Wb: Array, kind: str) -> PairwiseTerms:
     if kind not in KINDS:
         raise ValueError(f"unknown kind {kind!r}")

@@ -1,0 +1,79 @@
+"""Sparse attractive-term kernel (Pallas TPU): directed ELL Laplacian matvec.
+
+Computes, per row tile, the gather half of the sparse attractive product
+(sparse/linalg.py):
+
+    (L(A) X)_n = (sum_j w_nj) x_n - sum_j w_nj x_{i_nj}
+
+for an ELL graph (indices (N, k), weights (N, k)).  The transpose half
+(A^T X, a scatter) stays in XLA — scatter has no fixed per-row arity to
+tile over, while the gather half is the regular-access hot path.
+
+TPU mapping (DESIGN.md §3.2 conventions carried over from pairwise.py):
+  * grid over row tiles; indices/weights/x-row tiles stream through VMEM,
+  * X is additionally passed whole (index map pinned to block (0, 0)) so
+    neighbor rows can be gathered from VMEM; this caps N at the VMEM
+    budget (~16k rows at the 128-lane d padding) — the HBM-resident
+    double-buffered DMA variant for larger N is a ROADMAP open item, and
+    benchmarks at N > VMEM-cap run the jnp path (ops.py dispatch),
+  * the row gather is a vector gather on the sublane axis
+    (jnp.take); Mosaic lowers it natively on recent toolchains,
+  * embedding dim d is pre-padded to the lane width by ops.py; N is
+    pre-padded to the tile size with zero-weight self-edge rows, which
+    contribute exactly zero (the ELL padding invariant).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ell_kernel(idx_ref, w_ref, x_row_ref, x_all_ref, out_ref):
+    idx = idx_ref[...]                                  # (TR, k) int32
+    w = w_ref[...].astype(jnp.float32)                  # (TR, k)
+    xi = x_row_ref[...].astype(jnp.float32)             # (TR, dp)
+    x_all = x_all_ref[...].astype(jnp.float32)          # (N, dp)
+
+    tr, k = idx.shape
+    gathered = jnp.take(x_all, idx.reshape(-1), axis=0,
+                        unique_indices=False, indices_are_sorted=False)
+    gathered = gathered.reshape(tr, k, x_all.shape[-1])
+    acc = jax.lax.dot_general(
+        w[:, None, :], gathered, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )[:, 0, :]                                           # (TR, dp)
+    deg = jnp.sum(w, axis=-1, keepdims=True)
+    out_ref[...] = deg * xi - acc
+
+
+def ell_lap_matvec_pallas(
+    X: jnp.ndarray,          # (N, dp) — dp lane-padded by ops.py
+    indices: jnp.ndarray,    # (N, k) int32
+    weights: jnp.ndarray,    # (N, k) float32
+    *,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Pallas implementation of ref.ell_lap_matvec_ref.
+
+    Requires N % block_rows == 0 (ops.py pads with zero-weight self-edge
+    rows) and X's last dim lane-padded."""
+    n, dp = X.shape
+    assert n % block_rows == 0, (n, block_rows)
+    k = indices.shape[1]
+    grid = (n // block_rows,)
+
+    return pl.pallas_call(
+        _ell_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, dp), lambda i: (i, 0)),
+            pl.BlockSpec((n, dp), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, dp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, dp), jnp.float32),
+        interpret=interpret,
+    )(indices, weights, X, X)

@@ -3,18 +3,47 @@
 `make_production_mesh` is a FUNCTION (never a module-level constant) so
 importing this module never touches jax device state.  Only
 launch/dryrun.py forces the 512 host devices.
+
+jax-version compatibility: `jax.sharding.AxisType` (and the `axis_types`
+kwarg on `jax.make_mesh` / `AbstractMesh`) only exist on newer jax; on
+older releases (the container pins 0.4.37) meshes are built without
+explicit axis types, which is equivalent to the Auto default we request.
+`axis_types_kwargs` / `make_abstract_mesh` are the shared fallbacks —
+tests use them too, so the suite collects on both old and new jax.
 """
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import AbstractMesh, Mesh
+
+try:
+    from jax.sharding import AxisType
+except ImportError:  # jax < 0.5: no explicit axis types (Auto is implied)
+    AxisType = None
+
+
+def axis_types_kwargs(n_axes: int) -> dict:
+    """`{"axis_types": (Auto,) * n}` where supported, else `{}`."""
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n_axes}
+
+
+def make_abstract_mesh(shape: tuple[int, ...],
+                       names: tuple[str, ...]) -> AbstractMesh:
+    """AbstractMesh across the two historical constructor signatures:
+    new jax takes (shape, names, *, axis_types=...); jax <= 0.4.x takes a
+    single ((name, size), ...) tuple."""
+    try:
+        return AbstractMesh(shape, names, **axis_types_kwargs(len(names)))
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, shape)))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **axis_types_kwargs(len(axes)))
 
 
 def make_host_mesh(model_axis: int = 1) -> Mesh:
@@ -22,7 +51,7 @@ def make_host_mesh(model_axis: int = 1) -> Mesh:
     n = len(jax.devices())
     assert n % model_axis == 0
     return jax.make_mesh((n // model_axis, model_axis), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+                         **axis_types_kwargs(2))
 
 
 def n_chips(mesh: Mesh) -> int:

@@ -1,0 +1,32 @@
+# Sparse neighbor-graph subsystem: O(N*k) attractive side for large-N
+# embeddings.  ELL (padded neighbor-list) storage, sparse Laplacian
+# operators + preconditioned CG, and perplexity calibration over k
+# candidates.  See docs/sparse.md for the design.
+from .graph import (
+    NeighborGraph,
+    SparseAffinities,
+    calibrated_weights_ell,
+    from_dense,
+    knn_graph,
+    reverse_graph,
+    sparse_affinities,
+    to_dense,
+)
+from .linalg import (
+    ell_matvec,
+    ell_t_matvec,
+    in_degree,
+    make_sd_operator,
+    out_degree,
+    pcg,
+    sym_degree,
+    sym_lap_matvec,
+)
+
+__all__ = [
+    "NeighborGraph", "SparseAffinities", "calibrated_weights_ell",
+    "from_dense", "knn_graph", "reverse_graph", "sparse_affinities",
+    "to_dense",
+    "ell_matvec", "ell_t_matvec", "in_degree", "make_sd_operator",
+    "out_degree", "pcg", "sym_degree", "sym_lap_matvec",
+]

@@ -1,0 +1,150 @@
+"""Sparse Laplacian operators over ELL graphs, and preconditioned CG.
+
+All operators apply the SYMMETRIC weight matrix W = (A + A^T)/2 implicitly
+from the directed ELL storage (graph.py):
+
+    W X       = (A X + A^T X) / 2         gather  +  scatter-add
+    deg(W)    = (out_degree + in_degree)/2
+    L(W) X    = deg(W) * X - W X
+
+The gather half (A X) is the Pallas-accelerated hot path
+(kernels/sparse_attractive.py via kernels.ops.ell_lap_matvec); the
+scatter-add half stays in XLA, whose scatter lowering is efficient and —
+unlike the gather — has no fixed per-row arity to tile over.
+
+The spectral-direction solve B p = -g with B = 4 L(W+) + mu I never forms
+(N, N): `pcg` is Jacobi-preconditioned CG on the (N, d) right-hand side
+(all d columns share B, so one matvec per iteration serves every column).
+An incomplete-Cholesky preconditioner is a ROADMAP open item — Jacobi is
+already a good match because B's diagonal 4 deg + mu dominates when the
+calibrated row degrees are O(1).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+from .graph import NeighborGraph
+
+Array = jnp.ndarray
+
+
+def out_degree(g: NeighborGraph) -> Array:
+    """Row sums of A (padded slots have zero weight)."""
+    return jnp.sum(g.weights, axis=-1)
+
+
+def in_degree(g: NeighborGraph) -> Array:
+    """Column sums of A, by scatter-add."""
+    d = jnp.zeros(g.n, dtype=g.weights.dtype)
+    return d.at[g.indices].add(g.weights)
+
+
+def sym_degree(g: NeighborGraph) -> Array:
+    """Degrees of the implicit W = (A + A^T)/2."""
+    return 0.5 * (out_degree(g) + in_degree(g))
+
+
+def ell_matvec(g: NeighborGraph, X: Array) -> Array:
+    """A @ X by row gather: sum_j w_nj * X[i_nj]."""
+    return jnp.einsum("nk,nkd->nd", g.weights, X[g.indices])
+
+
+def ell_t_matvec(g: NeighborGraph, X: Array) -> Array:
+    """A^T @ X by scatter-add: row m accumulates w_nm * X[n]."""
+    out = jnp.zeros_like(X)
+    contrib = g.weights[:, :, None] * X[:, None, :]     # (N, k, d)
+    return out.at[g.indices].add(contrib)
+
+
+def sym_lap_matvec(g: NeighborGraph, X: Array,
+                   rev: NeighborGraph | None = None, **impl) -> Array:
+    """L((A + A^T)/2) @ X in O(N k d), as (L(A)X + L(A^T)X) / 2.
+
+    When `rev` (the precomputed transpose ELL, graph.reverse_graph) is
+    given, BOTH halves are directed-Laplacian row gathers through the
+    Pallas dispatcher (kernels.ops.ell_lap_matvec; `impl` kwargs are
+    forwarded) — the form the CG hot loop needs, since XLA's CPU
+    scatter-add is orders of magnitude slower than the gather.  Without
+    `rev` the transpose half falls back to scatter-add — fine for graphs
+    that change every iteration (sampled negatives) where building the
+    transpose would itself cost a scatter."""
+    la_x = ops.ell_lap_matvec(X, g.indices, g.weights, **impl)
+    if rev is not None:
+        lat_x = ops.ell_lap_matvec(X, rev.indices, rev.weights, **impl)
+    else:
+        lat_x = in_degree(g)[:, None] * X - ell_t_matvec(g, X)
+    return 0.5 * (la_x + lat_x)
+
+
+def make_sd_operator(g: NeighborGraph, rev: NeighborGraph | None,
+                     mu_scale: float = 1e-5):
+    """(matvec, inv_diag, mu) for the sparse spectral-direction system
+    B = 4 L((A + A^T)/2) + mu I — the one place the jitter formula and
+    Jacobi diagonal live for the pure-sparse case (trainer, benchmarks).
+    core.strategies.SparseSD generalizes this with the full-degree
+    residual shift for dense-kappa conversions."""
+    bd = 4.0 * sym_degree(g)
+    mu = jnp.maximum(1e-10 * jnp.min(bd), mu_scale * jnp.mean(bd))
+    inv_diag = 1.0 / (bd + mu)
+
+    def matvec(V):
+        return 4.0 * sym_lap_matvec(g, V, rev=rev) + mu * V
+
+    return matvec, inv_diag, mu
+
+
+# -- preconditioned CG ----------------------------------------------------------
+
+
+class PCGResult(NamedTuple):
+    x: Array             # (N, d)
+    n_iters: Array
+    rel_residual: Array
+
+
+def pcg(
+    matvec: Callable[[Array], Array],
+    B: Array,                 # (N, d) right-hand side
+    x0: Array,                # (N, d) warm start
+    inv_diag: Array | None = None,   # (N,) Jacobi preconditioner diag(M)^-1
+    tol: float = 1e-2,
+    maxiter: int = 100,
+) -> PCGResult:
+    """Preconditioned conjugate gradients on a multi-column RHS.
+
+    All columns share the same SPD operator, so the d systems run fused:
+    one operator application per iteration, scalar products summed over all
+    columns (equivalent to CG on the block-diagonal system; exact for the
+    Kronecker structure B (x) I_d of the spectral direction)."""
+    precond = ((lambda r: inv_diag[:, None] * r) if inv_diag is not None
+               else (lambda r: r))
+    b_norm = jnp.maximum(jnp.linalg.norm(B), 1e-30)
+    r0 = B - matvec(x0)
+    z0 = precond(r0)
+    rz0 = jnp.vdot(r0, z0)
+
+    def cond(carry):
+        _, r, _, _, k = carry
+        return jnp.logical_and(jnp.linalg.norm(r) > tol * b_norm, k < maxiter)
+
+    def body(carry):
+        x, r, p, rz, k = carry
+        Ap = matvec(p)
+        alpha = rz / jnp.maximum(jnp.vdot(p, Ap), 1e-30)
+        x = x + alpha * p
+        r = r - alpha * Ap
+        z = precond(r)
+        rz_new = jnp.vdot(r, z)
+        beta = rz_new / jnp.maximum(rz, 1e-30)
+        p = z + beta * p
+        return x, r, p, rz_new, k + 1
+
+    x, r, _, _, k = jax.lax.while_loop(
+        cond, body, (x0, r0, z0, rz0, jnp.asarray(0)))
+    return PCGResult(x=x, n_iters=k,
+                     rel_residual=jnp.linalg.norm(r) / b_norm)

@@ -1,0 +1,82 @@
+"""Optional-hypothesis shim so a missing dev dependency cannot break
+collection of the whole suite under `pytest -x`.
+
+Import `given, settings, st` from here instead of from hypothesis.  When
+hypothesis is installed these ARE hypothesis's objects (full shrinking /
+randomization).  When it is missing, the fallback runs each @given test as
+a deterministic sweep of `max_examples` pseudo-random draws — weaker than
+property testing but the same code paths get exercised.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    _MIX = 2654435761  # Knuth multiplicative hash
+
+    class _Strategy:
+        def example(self, i: int, salt: int):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = lo, hi
+
+        def example(self, i, salt):
+            span = self.hi - self.lo + 1
+            return self.lo + ((i * _MIX + salt * 40503) % span)
+
+    class _Floats(_Strategy):
+        def __init__(self, lo: float, hi: float):
+            self.lo, self.hi = lo, hi
+
+        def example(self, i, salt):
+            u = ((i * _MIX + salt * 40503) % 10_000) / 10_000.0
+            return self.lo + u * (self.hi - self.lo)
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, seq):
+            self.seq = list(seq)
+
+        def example(self, i, salt):
+            return self.seq[(i + salt) % len(self.seq)]
+
+    class st:  # noqa: N801 - mimics `strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Floats(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(seq):
+            return _SampledFrom(seq)
+
+    def given(**strategies):
+        def deco(fn):
+            # deliberately NOT functools.wraps: pytest must see a zero-arg
+            # signature, or it would treat the strategy params as fixtures
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", 10)
+                for i in range(n):
+                    kwargs = {
+                        name: strat.example(i, salt)
+                        for salt, (name, strat)
+                        in enumerate(sorted(strategies.items()))
+                    }
+                    fn(**kwargs)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+    def settings(max_examples: int = 10, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco

@@ -24,14 +24,13 @@ _SUBPROCESS_PROG = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import AxisType
+    from repro.launch.mesh import axis_types_kwargs
     from repro.core import make_affinities, energy_and_grad
     from repro.embed import (EmbedMeshSpec, make_distributed_energy_grad,
                              make_block_jacobi_setup, make_block_jacobi_solve,
                              shard_pairwise, shard_rows)
     assert len(jax.devices()) == 8
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = jax.make_mesh((2, 4), ("data", "model"), **axis_types_kwargs(2))
     spec = EmbedMeshSpec(row_axes=("data",), col_axis="model")
 
     N, d = 64, 2

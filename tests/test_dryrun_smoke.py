@@ -14,7 +14,7 @@ _PROG = textwrap.dedent("""
     import jax
     import dataclasses
     import numpy as np
-    from jax.sharding import AxisType
+    from repro.launch.mesh import axis_types_kwargs
     from repro.configs import RunConfig, get_smoke_config
     from repro.configs.base import ShapeConfig
     from repro.data import batch_specs
@@ -26,8 +26,7 @@ _PROG = textwrap.dedent("""
                               params_specs, train_state_specs)
     from repro.optim.adamw import AdamWConfig
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = jax.make_mesh((2, 4), ("data", "model"), **axis_types_kwargs(2))
 
     for arch in ("qwen2-7b", "grok-1-314b", "rwkv6-7b"):
         cfg = get_smoke_config(arch)

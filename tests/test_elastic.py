@@ -12,7 +12,7 @@ _PROG = textwrap.dedent("""
     import os, tempfile
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, numpy as np
-    from jax.sharding import AxisType
+    from repro.launch.mesh import axis_types_kwargs
     from repro.ckpt import Checkpointer
     from repro.configs import RunConfig, get_smoke_config
     from repro.configs.base import ShapeConfig
@@ -40,7 +40,7 @@ _PROG = textwrap.dedent("""
 
     # phase 1: train 3 steps on a (4, 2) mesh
     mesh1 = jax.make_mesh((4, 2), ("data", "model"),
-                          axis_types=(AxisType.Auto,) * 2)
+                          **axis_types_kwargs(2))
     state, axes = init_train_state(model, jax.random.PRNGKey(0))
     sh1 = shardings(mesh1, axes, state)
     state = jax.tree.map(jax.device_put, state, sh1)
@@ -53,7 +53,7 @@ _PROG = textwrap.dedent("""
 
     # phase 2: restore onto a DIFFERENT mesh (2, 4) and keep training
     mesh2 = jax.make_mesh((2, 4), ("data", "model"),
-                          axis_types=(AxisType.Auto,) * 2)
+                          **axis_types_kwargs(2))
     state2, axes2 = init_train_state(model, jax.random.PRNGKey(0))
     sh2 = shardings(mesh2, axes2, state2)
     ck = Checkpointer(ckdir)

@@ -37,12 +37,11 @@ _PROG = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import AxisType
+    from repro.launch.mesh import axis_types_kwargs
     from repro.core import make_affinities, energy_and_grad
     from repro.embed import (EmbedMeshSpec, make_distributed_energy_grad,
                              shard_pairwise)
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = jax.make_mesh((4, 2), ("data", "model"), **axis_types_kwargs(2))
     spec = EmbedMeshSpec(row_axes=("data",), col_axis="model")
     N = 64
     Y = jax.random.normal(jax.random.PRNGKey(0), (N, 8))

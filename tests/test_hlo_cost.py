@@ -83,9 +83,10 @@ _COLLECTIVE_PROG = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp
-    from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import axis_types_kwargs
     from repro.launch.hlo_cost import analyze_text
-    mesh = jax.make_mesh((8,), ("model",), axis_types=(AxisType.Auto,))
+    mesh = jax.make_mesh((8,), ("model",), **axis_types_kwargs(1))
     D = 512
     a = jax.ShapeDtypeStruct((D, D), jnp.float32)
     sh_in = NamedSharding(mesh, P("model", None))

@@ -8,7 +8,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# hypothesis is an optional dev dependency ([test] extra); the shim runs a
+# deterministic sweep when it is missing
+from tests._hypothesis_compat import given, settings, st
 
 from repro.kernels import ops
 from repro.kernels.ref import KINDS, pairwise_terms_ref

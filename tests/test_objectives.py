@@ -7,7 +7,7 @@ optimization framework rests on.
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core import energy_and_grad, gradient_weights, make_affinities
 from repro.core.objectives import direct_energy, is_normalized

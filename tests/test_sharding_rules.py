@@ -3,14 +3,13 @@ Uses abstract meshes (no forced devices needed: AbstractMesh shapes only)."""
 import jax
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import fsdp_axes, spec_for
+from repro.launch.mesh import make_abstract_mesh
 
-SINGLE = AbstractMesh((16, 16), ("data", "model"),
-                      axis_types=(AxisType.Auto,) * 2)
-MULTI = AbstractMesh((2, 16, 16), ("pod", "data", "model"),
-                     axis_types=(AxisType.Auto,) * 3)
+SINGLE = make_abstract_mesh((16, 16), ("data", "model"))
+MULTI = make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_fsdp_axes():

@@ -1,0 +1,215 @@
+"""Sparse neighbor-graph subsystem: ELL invariants, dense<->sparse parity,
+and CG-vs-Cholesky spectral-direction agreement (docs/sparse.md)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SD, energy_and_grad, energy_and_grad_sparse,
+                        make_affinities, make_strategy)
+from repro.core.laplacian import laplacian_matmul
+from repro.core.strategies import SparseSD
+from repro.sparse import (NeighborGraph, from_dense, knn_graph, pcg,
+                          sparse_affinities, sym_degree, sym_lap_matvec,
+                          to_dense)
+from tests.conftest import three_loops
+
+UNNORM = [("ee", 50.0), ("tee", 10.0), ("epan", 5.0)]
+
+
+def _problem(n=41, d_hi=6, seed=0):
+    Y = jax.random.normal(jax.random.PRNGKey(seed), (n, d_hi))
+    X = jax.random.normal(jax.random.PRNGKey(seed + 1), (n, 2)) * 0.5
+    return Y, X
+
+
+# -- graph construction ---------------------------------------------------------
+
+
+def test_knn_exact_matches_brute_force():
+    Y, _ = _problem(n=33)
+    d2, idx = knn_graph(Y, 5, method="exact", block_rows=8)
+    D2 = np.array(jnp.sum((Y[:, None] - Y[None]) ** 2, axis=-1))
+    np.fill_diagonal(D2, np.inf)
+    for i in range(Y.shape[0]):
+        want = set(np.argsort(D2[i])[:5])
+        assert set(np.asarray(idx[i])) == want, i
+
+
+def test_knn_approx_high_recall_on_manifold_data():
+    Y = three_loops(n_per=40, loops=2, dim=8)
+    _, ie = knn_graph(Y, 5, method="exact")
+    _, ia = knn_graph(Y, 5, method="approx", n_projections=8, window=12)
+    hits = sum(len(set(np.asarray(ie[i])) & set(np.asarray(ia[i])))
+               for i in range(Y.shape[0]))
+    assert hits / (Y.shape[0] * 5) > 0.9
+
+
+def test_ell_padding_invariant_exact_zero():
+    """Padded slots (self index, zero weight) contribute exactly zero to
+    every operator — bitwise, not approximately."""
+    n, k = 16, 4
+    key = jax.random.PRNGKey(0)
+    idx = jax.random.randint(key, (n, k), 0, n, dtype=jnp.int32)
+    w = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (n, k)))
+    X = jax.random.normal(jax.random.PRNGKey(2), (n, 2))
+    g = NeighborGraph(indices=idx, weights=w)
+    # pad every row with extra self-edge zero-weight slots
+    pad_idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None], (n, 3))
+    gp = NeighborGraph(
+        indices=jnp.concatenate([idx, pad_idx], axis=1),
+        weights=jnp.concatenate([w, jnp.zeros((n, 3))], axis=1))
+    np.testing.assert_array_equal(np.asarray(sym_lap_matvec(g, X)),
+                                  np.asarray(sym_lap_matvec(gp, X)))
+    np.testing.assert_array_equal(np.asarray(sym_degree(g)),
+                                  np.asarray(sym_degree(gp)))
+    np.testing.assert_array_equal(np.asarray(to_dense(g)),
+                                  np.asarray(to_dense(gp)))
+
+
+def test_from_dense_to_dense_roundtrip():
+    Y, _ = _problem(n=20)
+    aff = make_affinities(Y, 6.0, model="ee")
+    g = from_dense(aff.Wp, k=aff.Wp.shape[0] - 1)
+    np.testing.assert_allclose(np.asarray(to_dense(g)), np.asarray(aff.Wp),
+                               rtol=1e-6, atol=1e-9)
+
+
+def test_sym_lap_matvec_matches_dense_laplacian():
+    Y, X = _problem()
+    n = Y.shape[0]
+    saff = sparse_affinities(Y, k=n - 1, perplexity=8.0, model="ee")
+    aff = make_affinities(Y, 8.0, model="ee")
+    got = sym_lap_matvec(saff.graph, X)
+    want = laplacian_matmul(aff.Wp, X)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_sparse_affinities_full_k_matches_dense():
+    Y, _ = _problem()
+    n = Y.shape[0]
+    for model in ("ee", "tsne"):
+        saff = sparse_affinities(Y, k=n - 1, perplexity=8.0, model=model)
+        aff = make_affinities(Y, 8.0, model=model)
+        A = to_dense(saff.graph)
+        np.testing.assert_allclose(np.asarray(0.5 * (A + A.T)),
+                                   np.asarray(aff.Wp), rtol=1e-4, atol=1e-8)
+
+
+def test_truncated_k_calibration_rowsums():
+    """Calibrated conditionals over k candidates are row-stochastic."""
+    Y, _ = _problem()
+    saff = sparse_affinities(Y, k=10, perplexity=5.0, model="ee")
+    rows = jnp.sum(saff.graph.weights, axis=1)
+    np.testing.assert_allclose(np.asarray(rows), 1.0, rtol=1e-4)
+
+
+# -- energy/gradient parity -----------------------------------------------------
+
+
+@pytest.mark.parametrize("kind,lam", UNNORM)
+def test_sparse_energy_grad_matches_dense_oracle(kind, lam):
+    """Acceptance criterion: <= 1e-4 relative agreement at kappa = N-1
+    with exhaustive negatives."""
+    Y, X = _problem()
+    n = Y.shape[0]
+    aff = make_affinities(Y, 8.0, model=kind)
+    saff = sparse_affinities(Y, k=n - 1, perplexity=8.0, model=kind)
+    E1, G1 = energy_and_grad(X, aff, kind, lam)
+    E2, G2 = energy_and_grad_sparse(X, saff, kind, lam, n_negatives=None)
+    assert abs(float(E1 - E2)) / abs(float(E1)) < 1e-4
+    relG = float(jnp.linalg.norm(G1 - G2) / jnp.linalg.norm(G1))
+    assert relG < 1e-4, (kind, relG)
+
+
+@pytest.mark.parametrize("kind,lam", [("ee", 50.0), ("tee", 10.0)])
+def test_negative_sampling_unbiased(kind, lam):
+    Y, X = _problem()
+    aff = make_affinities(Y, 8.0, model=kind)
+    saff = sparse_affinities(Y, k=Y.shape[0] - 1, perplexity=8.0, model=kind)
+    E_true, G_true = energy_and_grad(X, aff, kind, lam)
+    Es, Gs = [], []
+    for s in range(60):
+        E, G = energy_and_grad_sparse(X, saff, kind, lam, n_negatives=8,
+                                      key=jax.random.PRNGKey(s))
+        Es.append(float(E))
+        Gs.append(np.asarray(G))
+    assert abs(np.mean(Es) - float(E_true)) / abs(float(E_true)) < 0.02
+    # the 60-sample mean still carries ~sigma/sqrt(60) Monte-Carlo noise;
+    # 0.1 is ~2x the measured value, far below the O(1) error of a biased
+    # (uncorrected) estimator
+    relG = (np.linalg.norm(np.mean(Gs, axis=0) - np.asarray(G_true))
+            / np.linalg.norm(np.asarray(G_true)))
+    assert relG < 0.1
+
+
+def test_sampled_gradient_translation_invariant():
+    """Symmetric application of sampled edges => columns of G sum to ~0."""
+    Y, X = _problem()
+    saff = sparse_affinities(Y, k=10, perplexity=5.0, model="ee")
+    _, G = energy_and_grad_sparse(X, saff, "ee", 50.0, n_negatives=6,
+                                  key=jax.random.PRNGKey(3))
+    colsum = np.asarray(jnp.sum(G, axis=0))
+    assert np.all(np.abs(colsum) < 1e-3 * float(jnp.max(jnp.abs(G))))
+
+
+def test_normalized_kinds_rejected():
+    Y, X = _problem(n=12)
+    saff = sparse_affinities(Y, k=5, perplexity=3.0, model="ssne")
+    with pytest.raises(ValueError):
+        energy_and_grad_sparse(X, saff, "ssne", 1.0, n_negatives=None)
+
+
+# -- spectral direction ---------------------------------------------------------
+
+
+def test_sparse_sd_matches_cholesky_sd():
+    """Jacobi-CG solve from ELL storage vs the dense Cholesky backsolve."""
+    Y, X = _problem()
+    aff = make_affinities(Y, 8.0, model="ee")
+    G = jax.random.normal(jax.random.PRNGKey(5), X.shape)
+    sd = SD()
+    P1, _ = sd.direction(sd.init(X, aff, "ee", 50.0), X, G, aff, "ee", 50.0)
+    ssd = SparseSD(cg_tol=1e-6, cg_maxiter=500)
+    P2, _ = ssd.direction(ssd.init(X, aff, "ee", 50.0), X, G, aff, "ee", 50.0)
+    rel = float(jnp.linalg.norm(P1 - P2) / jnp.linalg.norm(P1))
+    assert rel < 5e-3, rel
+
+
+def test_sparse_sd_native_graph_descends():
+    """minimize() with SparseSD initialized from SparseAffinities state."""
+    from repro.core import LSConfig, minimize
+    Y = three_loops(n_per=24, loops=2, dim=8)
+    aff = make_affinities(Y, 10.0, model="ee")
+    X0 = jax.random.normal(jax.random.PRNGKey(0), (Y.shape[0], 2)) * 0.1
+    res = minimize(X0, aff, "ee", 50.0, make_strategy("sparsesd"),
+                   max_iters=20, ls_cfg=LSConfig(init_step="adaptive_grow"))
+    assert res.energies[-1] < 0.5 * res.energies[0]
+
+
+def test_pcg_solves_spd_system():
+    n, d = 30, 3
+    key = jax.random.PRNGKey(0)
+    M = jax.random.normal(key, (n, n))
+    A = M @ M.T + n * jnp.eye(n)
+    B = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    res = pcg(lambda V: A @ V, B, jnp.zeros_like(B),
+              inv_diag=1.0 / jnp.diag(A), tol=1e-7, maxiter=400)
+    np.testing.assert_allclose(np.asarray(res.x),
+                               np.asarray(jnp.linalg.solve(A, B)),
+                               rtol=1e-3, atol=1e-4)
+
+
+# -- trainer integration --------------------------------------------------------
+
+
+def test_trainer_sparse_path_descends():
+    from repro.embed.trainer import DistributedEmbedding, EmbedConfig
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    Y = three_loops(n_per=24, loops=2, dim=8)
+    cfg = EmbedConfig(kind="ee", lam=50.0, perplexity=8.0, max_iters=15,
+                      sparse=True, n_neighbors=20, n_negatives=8)
+    res = DistributedEmbedding(cfg, mesh).fit(Y)
+    assert res.energies[-1] < res.energies[0]
+    assert res.X.shape == (Y.shape[0], 2)
