@@ -16,12 +16,23 @@ factor — ~1.6 GB at N=10k, plus an O(N^3) factorization on one CPU core)
 per-iteration time should scale ~linearly in N (acceptance: the measured
 scaling exponent over the sweep stays near 1, far from quadratic).
 
+`--devices 1,2,4,8` adds a device-count column: per count, a subprocess
+with that many forced host devices times the row-sharded backend
+(sparse/sharding.py) on a (devices, 1) mesh — the XLA device count must be
+fixed before jax initializes, hence the subprocess per count.  On one CPU
+core the emulated devices share the core, so this measures sharding
+OVERHEAD (psum + padding), not speedup; on real hardware the same flag
+wiring gives the scaling curve.
+
     PYTHONPATH=src python -m benchmarks.fig5_sparse_scaling [--ns 2000,10000,50000]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -31,7 +42,9 @@ import numpy as np
 from repro.core import (SD, LSConfig, energy_and_grad_sparse,
                         make_affinities, minimize)
 from repro.data import mnist_like
-from repro.sparse import make_sd_operator, pcg, sparse_affinities
+from repro.sparse import (make_sd_operator, make_sharded_energy_grad,
+                          make_sharded_sd_operator, pcg,
+                          shard_sparse_affinities, sparse_affinities)
 
 from .common import csv_row
 
@@ -54,21 +67,16 @@ def dense_point(Y: Array, kind: str, lam: float, iters: int,
             "iter_s": t_iter, "energy": float(res.energies[-1])}
 
 
-def sparse_point(Y: Array, kind: str, lam: float, iters: int,
-                 perplexity: float, k: int, m: int) -> dict:
-    n = Y.shape[0]
-    t0 = time.perf_counter()
-    saff = jax.block_until_ready(sparse_affinities(
-        Y, k=k, perplexity=perplexity, model=kind))
-    t_build = time.perf_counter() - t0
-
-    matvec, inv_diag, _ = make_sd_operator(saff.graph, saff.rev)
-    lam_ = jnp.asarray(lam, jnp.float32)
+def _time_sparse_iters(eg, matvec, inv_diag, n: int, iters: int,
+                       t_build: float) -> dict:
+    """Shared timing loop for the sparse/sharded columns: the jitted step
+    (eg -> warm-started PCG -> fixed small move) and the warmup/steady
+    timing must be IDENTICAL for the two columns' energies and iter times
+    to be comparable.  `eg(X, key) -> (E, G)`."""
 
     @jax.jit
     def step(X, P, key):
-        E, G = energy_and_grad_sparse(X, saff, kind, lam_,
-                                      n_negatives=m, key=key)
+        E, G = eg(X, key)
         P = pcg(matvec, -G, P, inv_diag=inv_diag, tol=1e-3, maxiter=50).x
         # fixed small step for timing purposes (the trainer line-searches)
         xc = X - jnp.mean(X, axis=0, keepdims=True)
@@ -81,19 +89,108 @@ def sparse_point(Y: Array, kind: str, lam: float, iters: int,
     P = jnp.zeros_like(X)
     key0 = jax.random.PRNGKey(1)
     X, P, E = jax.block_until_ready(step(X, P, key0))   # compile + iter 1
-    t_setup = 0.0
     t0 = time.perf_counter()
     for it in range(1, iters):
         X, P, E = step(X, P, jax.random.fold_in(key0, it))
     jax.block_until_ready(X)
     t_iter = (time.perf_counter() - t0) / max(iters - 1, 1)
-    return {"build_s": t_build, "setup_s": t_setup,
+    return {"build_s": t_build, "setup_s": 0.0,
             "iter_s": t_iter, "energy": float(E)}
+
+
+def sparse_point(Y: Array, kind: str, lam: float, iters: int,
+                 perplexity: float, k: int, m: int) -> dict:
+    t0 = time.perf_counter()
+    saff = jax.block_until_ready(sparse_affinities(
+        Y, k=k, perplexity=perplexity, model=kind))
+    t_build = time.perf_counter() - t0
+
+    matvec, inv_diag, _ = make_sd_operator(saff.graph, saff.rev)
+    lam_ = jnp.asarray(lam, jnp.float32)
+    eg = lambda X, key: energy_and_grad_sparse(X, saff, kind, lam_,
+                                               n_negatives=m, key=key)
+    return _time_sparse_iters(eg, matvec, inv_diag, Y.shape[0], iters,
+                              t_build)
+
+
+def sharded_point(Y: Array, mesh, kind: str, lam: float, iters: int,
+                  perplexity: float, k: int, m: int) -> dict:
+    """Row-sharded sparse per-iteration time on an existing mesh."""
+    t0 = time.perf_counter()
+    saff = jax.block_until_ready(sparse_affinities(
+        Y, k=k, perplexity=perplexity, model=kind))
+    sg = shard_sparse_affinities(mesh, ("data",), saff)
+    t_build = time.perf_counter() - t0
+
+    eg_l, _ = make_sharded_energy_grad(mesh, ("data",), sg, kind,
+                                       n_negatives=m)
+    matvec, inv_diag, _ = make_sharded_sd_operator(mesh, ("data",), sg, saff)
+    lam_ = jnp.asarray(lam, jnp.float32)
+    eg = lambda X, key: eg_l(X, lam_, key)
+    return _time_sparse_iters(eg, matvec, inv_diag, Y.shape[0], iters,
+                              t_build)
+
+
+_WORKER_MARK = "FIG5_WORKER_JSON "
+
+
+def _sharded_worker(n_devices: int, ns, kind, lam, iters, perplexity, k, m,
+                    dim) -> None:
+    """Child-process entry: jax was initialized with `n_devices` forced
+    host devices (XLA_FLAGS set by the parent before spawn)."""
+    from repro.launch.mesh import axis_types_kwargs
+
+    assert len(jax.devices()) >= n_devices, (len(jax.devices()), n_devices)
+    mesh = jax.make_mesh((n_devices, 1), ("data", "model"),
+                         devices=jax.devices()[:n_devices],
+                         **axis_types_kwargs(2))
+    out = {}
+    for n in ns:
+        Y, _ = mnist_like(n=n, dim=dim)
+        out[n] = sharded_point(jnp.asarray(Y), mesh, kind, lam, iters,
+                               perplexity, k, m)
+    print(_WORKER_MARK + json.dumps(out), flush=True)
+
+
+def _run_sharded_sweep(devices, ns, kind, lam, iters, perplexity, k, m,
+                       dim) -> dict:
+    """Per device count, spawn a subprocess with that many forced host
+    devices and collect its sharded_point rows: {n: {n_devices: row}}."""
+    out: dict = {n: {} for n in ns}
+    for dev in devices:
+        env = dict(os.environ)
+        # keep the parent's other XLA flags (identical configs for the
+        # sparse vs sharded columns), replacing only the device count
+        inherited = [f for f in env.get("XLA_FLAGS", "").split()
+                     if not f.startswith("--xla_force_host_platform_device_count")]
+        env["XLA_FLAGS"] = " ".join(
+            inherited + [f"--xla_force_host_platform_device_count={dev}"])
+        argv = [sys.executable, "-m", "benchmarks.fig5_sparse_scaling",
+                "--worker-devices", str(dev),
+                "--ns", ",".join(str(n) for n in ns), "--kind", kind,
+                "--lam", str(lam), "--iters", str(iters), "--k", str(k),
+                "--perplexity", str(perplexity), "--m", str(m),
+                "--dim", str(dim)]
+        proc = subprocess.run(argv, capture_output=True, text=True, env=env)
+        if proc.returncode != 0:
+            csv_row("fig5", kind, f"sharded@{dev}dev", "FAILED",
+                    proc.stderr.strip().splitlines()[-1] if proc.stderr
+                    else "")
+            continue
+        payload = [ln for ln in proc.stdout.splitlines()
+                   if ln.startswith(_WORKER_MARK)]
+        rows = json.loads(payload[-1][len(_WORKER_MARK):])
+        for n_str, row in rows.items():
+            out[int(n_str)][dev] = row
+            csv_row("fig5", kind, f"sharded@{dev}dev", int(n_str),
+                    f"{row['build_s']:.2f}", f"{row['iter_s']:.4f}",
+                    f"{row['energy']:.6g}")
+    return out
 
 
 def run(ns=(2000, 10_000, 50_000), kind="ee", lam=100.0, iters=10,
         perplexity=10.0, k=30, m=5, dense_cutoff=5000, dim=64,
-        out_json=None):
+        devices=(), out_json=None):
     # keep k >= 3 * perplexity: with fewer candidates the entropy target
     # log(perplexity) is unreachable and the sparse calibration degenerates
     # to uniform, making the dense/sparse energy columns incomparable
@@ -117,6 +214,11 @@ def run(ns=(2000, 10_000, 50_000), kind="ee", lam=100.0, iters=10,
                 f"{row['sparse']['iter_s']:.4f}",
                 f"{row['sparse']['energy']:.6g}")
         results[n] = row
+    if devices:
+        sharded = _run_sharded_sweep(devices, ns, kind, lam, iters,
+                                     perplexity, k, m, dim)
+        for n in ns:
+            results[n]["sharded"] = sharded[n]
     # linear-scaling figure of merit over the sparse sweep
     ns_run = sorted(results)
     if len(ns_run) >= 2:
@@ -125,6 +227,8 @@ def run(ns=(2000, 10_000, 50_000), kind="ee", lam=100.0, iters=10,
         csv_row("fig5", kind, "sparse-scaling-exponent", f"{n0}->{n1}",
                 f"{np.log(max(t1, 1e-9) / max(t0, 1e-9)) / np.log(n1 / n0):.2f}")
     if out_json:
+        if os.path.dirname(out_json):
+            os.makedirs(os.path.dirname(out_json), exist_ok=True)
         with open(out_json, "w") as f:
             json.dump(results, f)
     return results
@@ -148,10 +252,21 @@ def main():
     ap.add_argument("--perplexity", type=float, default=10.0)
     ap.add_argument("--m", type=int, default=5)
     ap.add_argument("--dense-cutoff", type=int, default=5000)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--devices", type=_ns_list, default=(),
+                    help="emulated device counts for the row-sharded "
+                         "column, e.g. 1,2,4,8 (one subprocess per count)")
+    ap.add_argument("--worker-devices", type=int, default=None,
+                    help=argparse.SUPPRESS)   # internal: sharded-sweep child
     ap.add_argument("--out", default=None)
     a = ap.parse_args()
+    if a.worker_devices is not None:
+        _sharded_worker(a.worker_devices, a.ns, a.kind, a.lam, a.iters,
+                        a.perplexity, a.k, a.m, a.dim)
+        return
     run(ns=a.ns, kind=a.kind, lam=a.lam, iters=a.iters, k=a.k, m=a.m,
-        perplexity=a.perplexity, dense_cutoff=a.dense_cutoff, out_json=a.out)
+        perplexity=a.perplexity, dense_cutoff=a.dense_cutoff, dim=a.dim,
+        devices=a.devices, out_json=a.out)
 
 
 if __name__ == "__main__":

@@ -1,15 +1,18 @@
-"""The optimizer driver: direction -> backtracking line search -> iterate.
+"""The dense single-device optimizer driver — now a thin wrapper over the
+unified fit engine (embed/engine.py).
 
-One jitted XLA program per (strategy, kind, line-search config, shapes); the
-Python loop around it only does trace bookkeeping and convergence checks, so
-wall-clock comparisons across strategies are apples-to-apples (as in the
-paper's figures, which plot E vs runtime and vs iterations).
+The whole iteration (direction -> backtracking line search -> update) stays
+ONE jitted XLA program per (strategy, kind, line-search config, shapes):
+`DenseObjective.make_fused_step` hands `_step` to the engine, whose Python
+loop only does trace bookkeeping and convergence checks — so wall-clock
+comparisons across strategies remain apples-to-apples (as in the paper's
+figures, which plot E vs runtime and vs iterations), and results are
+bit-identical to the pre-engine driver.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-import time
 from typing import Any, Callable
 
 import jax
@@ -63,6 +66,49 @@ def _step(strategy, kind, ls_cfg: LSConfig, X, E, G, state, alpha_prev,
     return X_new, E_new, G_new, state, ls.alpha, ls.n_evals + 1
 
 
+@dataclasses.dataclass
+class DenseObjective:
+    """Dense single-device backend of the engine's Objective protocol.
+
+    Deterministic (key is ignored).  `make_fused_step` closes over the
+    jitted `_step`, so the engine runs one XLA program per iteration.
+    `X0` seeds the strategy state (some strategies size warm starts from
+    it, e.g. SparseSD's prev_P).
+    """
+
+    aff: Affinities
+    kind: str
+    lam: Array
+    strategy: Any
+    ls_cfg: LSConfig
+    X0: Array
+
+    stochastic = False
+
+    def energy_and_grad(self, X, key):
+        return energy_and_grad(X, self.aff, self.kind, self.lam)
+
+    def energy(self, X, key):
+        return energy(X, self.aff, self.kind, self.lam)
+
+    def make_direction_solver(self):
+        def solve(state, X, G):
+            return self.strategy.direction(
+                state, X, G, self.aff, self.kind, self.lam)
+
+        # strategy.init may factor a Cholesky etc. — this is the setup cost
+        state0 = self.strategy.init(self.X0, self.aff, self.kind, self.lam)
+        return solve, state0
+
+    def make_fused_step(self):
+        def step(X, E, G, state, alpha_prev):
+            return _step(self.strategy, self.kind, self.ls_cfg, X, E, G,
+                         state, alpha_prev, self.aff.Wp, self.aff.Wm,
+                         self.lam)
+
+        return step
+
+
 def minimize(
     X0: Array,
     aff: Affinities,
@@ -80,57 +126,27 @@ def minimize(
     Stops on relative energy decrease < tol, on max_iters, or (for the
     paper's fixed-budget comparisons) on max_seconds of wall-clock.
     """
+    # deferred: repro.embed.engine <- repro.embed.__init__ <- trainer <-
+    # repro.core would be circular at module-import time
+    from repro.embed.engine import LoopConfig, fit_loop
+
     lam = jnp.asarray(lam, dtype=X0.dtype)
-    t0 = time.perf_counter()
-    state = strategy.init(X0, aff, kind, lam)
-    state = jax.block_until_ready(state)
-    setup_time = time.perf_counter() - t0
-
-    E, G = jax.block_until_ready(
-        energy_and_grad(X0, aff, kind, lam)
+    obj = DenseObjective(aff, kind, lam, strategy, ls_cfg, X0)
+    res = fit_loop(
+        obj, X0,
+        LoopConfig(max_iters=max_iters, tol=tol, ls=ls_cfg,
+                   convergence="raw", max_seconds=max_seconds),
+        callback=callback,
     )
-    X = X0
-    alpha = jnp.asarray(1.0, dtype=X0.dtype)
-
-    energies = [float(E)]
-    gnorms = [float(jnp.linalg.norm(G))]
-    steps: list[float] = []
-    times = [0.0]
-    fevals = [1]
-
-    converged = False
-    t_loop = time.perf_counter()
-    it = 0
-    for it in range(1, max_iters + 1):
-        X, E_new, G, state, alpha, ne = jax.block_until_ready(
-            _step(strategy, kind, ls_cfg, X, E, G, state, alpha,
-                  aff.Wp, aff.Wm, lam)
-        )
-        now = time.perf_counter() - t_loop
-        energies.append(float(E_new))
-        gnorms.append(float(jnp.linalg.norm(G)))
-        steps.append(float(alpha))
-        times.append(now)
-        fevals.append(fevals[-1] + int(ne))
-        if callback is not None:
-            callback(it, X, float(E_new))
-        rel = abs(energies[-2] - energies[-1]) / max(abs(energies[-1]), 1e-30)
-        if rel < tol:
-            converged = True
-            break
-        E = E_new
-        if max_seconds is not None and now > max_seconds:
-            break
-
     return MinimizeResult(
-        X=X,
-        energies=np.asarray(energies),
-        grad_norms=np.asarray(gnorms),
-        step_sizes=np.asarray(steps),
-        times=np.asarray(times),
-        n_fevals=np.asarray(fevals),
-        n_iters=it,
-        converged=converged,
-        setup_time=setup_time,
-        strategy_state=state,
+        X=res.X,
+        energies=res.energies,
+        grad_norms=res.grad_norms,
+        step_sizes=res.step_sizes,
+        times=res.times,
+        n_fevals=res.n_fevals,
+        n_iters=res.n_iters,
+        converged=res.converged,
+        setup_time=res.setup_time,
+        strategy_state=res.state,
     )

@@ -113,6 +113,26 @@ def gradient_weights(X: Array, aff: Affinities, kind: str, lam) -> Array:
     raise ValueError(f"unknown kind {kind!r}")
 
 
+def negative_pair_terms(kind: str, t: Array) -> tuple[Array, Array]:
+    """Per-pair repulsive terms (s_pair, b) at squared distances t for the
+    unnormalized models: s_pair sums to the repulsive energy term s, b is
+    the gradient-Laplacian weight of the pair.  Shared by the sampled
+    negatives here and the row-sharded backend (sparse/sharding.py) — the
+    two must stay numerically identical for multi-device parity."""
+    if kind == "ee":
+        s_pair = jnp.exp(-t)
+        return s_pair, s_pair
+    if kind == "tee":
+        K = 1.0 / (1.0 + t)
+        return K, K * K
+    if kind == "epan":
+        return jnp.maximum(1.0 - t, 0.0), (t < 1.0).astype(t.dtype)
+    raise ValueError(
+        f"negative sampling supports unnormalized kinds only (got "
+        f"{kind!r}); normalized models need a ratio estimator "
+        f"(ROADMAP open item)")
+
+
 @functools.partial(jax.jit,
                    static_argnames=("kind", "n_negatives", "with_grad"))
 def energy_and_grad_sparse(
@@ -185,18 +205,7 @@ def energy_and_grad_sparse(
     J = (rows + shifts[None, :]) % n                           # (N, m)
 
     t_neg = jnp.sum((X[:, None, :] - X[J]) ** 2, axis=-1)      # (N, m)
-    if kind == "ee":
-        s_pair = jnp.exp(-t_neg)
-        b = s_pair
-    elif kind == "tee":
-        K = 1.0 / (1.0 + t_neg)
-        s_pair = K
-        b = K * K
-    elif kind == "epan":
-        s_pair = jnp.maximum(1.0 - t_neg, 0.0)
-        b = (t_neg < 1.0).astype(X.dtype)
-    else:  # pragma: no cover - every unnormalized kind handled above
-        raise ValueError(f"unhandled kind {kind!r}")
+    s_pair, b = negative_pair_terms(kind, t_neg)
 
     s_hat = scale * jnp.sum(s_pair)
     E = e_plus + lam * s_hat

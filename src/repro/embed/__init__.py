@@ -7,10 +7,12 @@ from .distributed import (
     shard_pairwise,
     shard_rows,
 )
+from .engine import EngineResult, LoopConfig, Objective, fit_loop
 from .trainer import DistributedEmbedding, EmbedConfig, FitResult
 
 __all__ = [
     "EmbedMeshSpec", "make_block_jacobi_setup", "make_block_jacobi_solve",
     "make_distributed_energy_grad", "replicate", "shard_pairwise",
     "shard_rows", "DistributedEmbedding", "EmbedConfig", "FitResult",
+    "EngineResult", "LoopConfig", "Objective", "fit_loop",
 ]

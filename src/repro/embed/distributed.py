@@ -37,13 +37,7 @@ import jax.scipy.linalg as jsl
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.objectives import is_normalized
-
-# jax >= 0.6 promotes shard_map to the top-level namespace; older releases
-# (the container pins 0.4.37) keep it in jax.experimental.
-if hasattr(jax, "shard_map"):
-    shard_map = jax.shard_map
-else:  # pragma: no cover - exercised on old jax only
-    from jax.experimental.shard_map import shard_map
+from repro.launch.mesh import linear_row_index, shard_map
 
 Array = jnp.ndarray
 
@@ -59,20 +53,9 @@ class EmbedMeshSpec:
         return self.row_axes + (self.col_axis,)
 
 
-def _axis_size(ax: str):
-    """jax.lax.axis_size is a recent addition; psum(1) is the portable
-    spelling of "size of this named axis" inside shard_map."""
-    if hasattr(jax.lax, "axis_size"):
-        return jax.lax.axis_size(ax)
-    return jax.lax.psum(1, ax)
-
-
 def _row_index(spec: EmbedMeshSpec) -> Array:
     """Linear row-block index of this device across the row axes."""
-    idx = jnp.asarray(0, jnp.int32)
-    for ax in spec.row_axes:
-        idx = idx * _axis_size(ax) + jax.lax.axis_index(ax)
-    return idx
+    return linear_row_index(spec.row_axes)
 
 
 def _row_groups(mesh: Mesh, spec: EmbedMeshSpec) -> int:

@@ -1,0 +1,282 @@
+"""The unified fit engine: ONE optimization driver for every backend.
+
+Before this layer existed the repo had three divergent copies of the same
+loop — `core/minimize.py` (jitted fused step + Python bookkeeping),
+`embed/trainer.py::fit` (dense mesh path, host-side backtracking) and
+`embed/trainer.py::_fit_sparse` (sparse path, EMA convergence) — so every
+new capability had to be written three times.  `fit_loop` now owns, once:
+
+  * the backtracking line search (core/linesearch semantics, including the
+    adaptive-grow trial step and the max-rel-move trust cap),
+  * convergence tests — raw relative energy decrease for deterministic
+    objectives, an exponential-moving-average test for stochastic ones
+    (a raw test would fire on sampling noise),
+  * checkpoint/resume (the payload carries X plus the line-search and
+    direction-solver state, so a resumed run replays the uninterrupted
+    trajectory bit-for-bit; per-iteration fold_in keys make the stochastic
+    surrogate exactly reproducible too),
+  * callbacks and wall-clock/feval traces.
+
+Backends implement the `Objective` protocol (docs/engine.md):
+
+    energy_and_grad(X, key) -> (E, G)     key is None for deterministic
+    energy(X, key)          -> E          line-search fast path
+    make_direction_solver() -> (solve, state0)
+                               solve(state, X, G) -> (P, state)
+
+and may additionally provide
+
+    stochastic: bool        EMA convergence + per-iteration PRNG keys
+    make_fused_step()       a single jitted (X, E, G, state, alpha) ->
+                            (X, E, G, state, alpha, n_evals) program that
+                            replaces the whole direction/line-search/update
+                            sequence — this is how `core/minimize.py` keeps
+                            its one-XLA-program-per-iteration timing (and
+                            its bit-identical results) through the refactor
+    place(X)                device placement for X-like arrays (e.g.
+                            replicate on a mesh); used on checkpoint restore
+
+Current backends: dense single-device (core/minimize.py), dense 2-D-sharded
+block-Jacobi and sparse single-device (embed/trainer.py), row-sharded
+sparse (sparse/sharding.py via embed/trainer.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import Checkpointer
+from repro.core.linesearch import LSConfig
+
+Array = jnp.ndarray
+
+
+@runtime_checkable
+class Objective(Protocol):
+    """Duck-typed; see the module docstring for optional members."""
+
+    def energy_and_grad(self, X: Array, key) -> tuple[Array, Array]: ...
+
+    def energy(self, X: Array, key) -> Array: ...
+
+    def make_direction_solver(self): ...
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopConfig:
+    max_iters: int = 200
+    tol: float = 1e-7
+    ls: LSConfig = LSConfig(init_step="adaptive_grow")
+    convergence: str = "auto"    # 'raw' | 'ema' | 'auto' (ema iff stochastic)
+    ema_decay: float = 0.9
+    checkpoint_dir: str | None = None
+    checkpoint_every: int = 50
+    seed: int = 0
+    max_seconds: float | None = None
+
+
+@dataclasses.dataclass
+class EngineResult:
+    X: Array
+    energies: np.ndarray      # E_k, k = 0..n_iters (includes E_0)
+    grad_norms: np.ndarray
+    step_sizes: np.ndarray
+    times: np.ndarray         # cumulative wall-clock seconds at each iterate
+    n_fevals: np.ndarray      # cumulative energy evaluations
+    n_iters: int
+    converged: bool
+    setup_time: float         # direction-solver init (e.g. Cholesky)
+    resumed_from: int | None
+    state: Any = None         # final direction-solver state
+
+
+def initial_step(X, P, alpha_prev: float, ls: LSConfig) -> float:
+    """Adaptive-grow initial trial step with the max-rel-move trust cap —
+    host-side mirror of the policy inside the jitted fused step."""
+    alpha0 = min(alpha_prev / ls.rho, 1.0)
+    if ls.max_rel_move is not None:
+        xc = X - jnp.mean(X, axis=0, keepdims=True)
+        scale = float(jnp.sqrt(jnp.mean(xc * xc))) + 1e-3
+        p_rms = float(jnp.sqrt(jnp.mean(P * P))) + 1e-30
+        alpha0 = min(alpha0, ls.max_rel_move * scale / p_rms)
+    return alpha0
+
+
+def host_backtrack(energy_of, X, e0: float, G, P, alpha0: float,
+                   ls: LSConfig) -> tuple[float, float, int]:
+    """Armijo backtracking with host-side floats (one energy eval per
+    trial).  Returns the accepted (alpha, E(X + alpha P), n_evals) — the
+    energy is always evaluated AT the accepted alpha, including on
+    backtrack exhaustion (where alpha shrinks once more after the last
+    failed trial)."""
+    gtp = float(jnp.vdot(G, P))
+    alpha = alpha0
+    n_evals = 0
+    for _ in range(ls.max_backtracks):
+        e_new = energy_of(X + alpha * P)
+        n_evals += 1
+        if e_new <= e0 + ls.c1 * alpha * gtp:
+            break
+        alpha *= ls.rho
+    else:
+        e_new = energy_of(X + alpha * P)
+        n_evals += 1
+    return alpha, e_new, n_evals
+
+
+def _place(objective, X):
+    place = getattr(objective, "place", None)
+    return place(X) if place is not None else X
+
+
+def fit_loop(
+    objective: Objective,
+    X0: Array,
+    cfg: LoopConfig = LoopConfig(),
+    callback: Callable[[int, Array, float], None] | None = None,
+) -> EngineResult:
+    """Run the unified optimization loop to convergence or budget.
+
+    Stops on relative (raw or EMA) energy decrease < tol, on max_iters, or
+    on max_seconds of wall-clock (the paper's fixed-budget comparisons).
+    """
+    stochastic = bool(getattr(objective, "stochastic", False))
+    conv = cfg.convergence
+    if conv == "auto":
+        conv = "ema" if stochastic else "raw"
+    if conv not in ("raw", "ema"):
+        raise ValueError(f"unknown convergence mode {conv!r}")
+
+    t0 = time.perf_counter()
+    solve, state = objective.make_direction_solver()
+    state = jax.block_until_ready(state)
+    setup_time = time.perf_counter() - t0
+
+    make_fused = getattr(objective, "make_fused_step", None)
+    fused_step = make_fused() if make_fused is not None else None
+
+    X = X0
+    # the fused step threads alpha as a device scalar; the host path as a
+    # python float — keep both so each backend sees its native type
+    alpha_dev = jnp.asarray(1.0, dtype=X0.dtype)
+    alpha_host = 1.0
+
+    ckpt = (Checkpointer(cfg.checkpoint_dir) if cfg.checkpoint_dir else None)
+    start_it, resumed_from = 0, None
+    ema = None
+    if ckpt is not None:
+        latest = ckpt.latest_step()
+        if latest is not None:
+            try:
+                payload = ckpt.restore(latest, {
+                    "X": X, "alpha": np.zeros(()), "ema": np.zeros(()),
+                    "state": state,
+                })
+            except ValueError:
+                # pre-engine checkpoints stored a bare X: resume from it
+                # with fresh line-search/solver state
+                payload = {"X": ckpt.restore(latest, X), "alpha": 1.0,
+                           "ema": None, "state": state}
+            X = _place(objective, jnp.asarray(payload["X"]))
+            alpha_host = float(payload["alpha"])
+            alpha_dev = jnp.asarray(alpha_host, dtype=X0.dtype)
+            ema = (float(payload["ema"])
+                   if payload["ema"] is not None else None)
+            state = payload["state"]
+            start_it, resumed_from = latest, latest
+
+    key0 = jax.random.PRNGKey(cfg.seed + 1) if stochastic else None
+    key = jax.random.fold_in(key0, start_it) if stochastic else None
+    E, G = jax.block_until_ready(objective.energy_and_grad(X, key))
+
+    energies = [float(E)]
+    gnorms = [float(jnp.linalg.norm(G))]
+    steps: list[float] = []
+    times = [0.0]
+    fevals = [1]
+    if ema is None:
+        ema = float(E)
+
+    def save(step):
+        if ckpt is not None:
+            ckpt.save(step, {
+                "X": X,
+                "alpha": np.asarray(alpha_host, np.float64),
+                "ema": np.asarray(ema, np.float64),
+                "state": state,
+            })
+
+    converged = False
+    t_loop = time.perf_counter()
+    it = start_it
+    for it in range(start_it + 1, cfg.max_iters + 1):
+        if fused_step is not None:
+            X, E_new, G, state, alpha_dev, ne = jax.block_until_ready(
+                fused_step(X, E, G, state, alpha_dev))
+            e_rec = float(E_new)
+            alpha_host = float(alpha_dev)
+            n_ev = int(ne)
+        else:
+            n_ev = 0
+            if stochastic:
+                # one PRNG key per iteration: the line search descends a
+                # deterministic surrogate (common random numbers)
+                key = jax.random.fold_in(key0, it)
+                E, G = objective.energy_and_grad(X, key)
+                n_ev += 1
+            P, state = solve(state, X, G)
+            alpha0 = initial_step(X, P, alpha_host, cfg.ls)
+            alpha_host, e_new, n_bt = host_backtrack(
+                lambda Xn: float(objective.energy(Xn, key)),
+                X, float(E), G, P, alpha0, cfg.ls)
+            n_ev += n_bt
+            X = X + alpha_host * P
+            if stochastic:
+                e_rec = e_new      # this iteration's surrogate, at accepted X
+            else:
+                E, G = objective.energy_and_grad(X, key)
+                e_rec = float(E)
+                n_ev += 1
+        now = time.perf_counter() - t_loop
+        energies.append(e_rec)
+        gnorms.append(float(jnp.linalg.norm(G)))
+        steps.append(alpha_host)
+        times.append(now)
+        fevals.append(fevals[-1] + n_ev)
+        if callback is not None:
+            callback(it, X, e_rec)
+        if conv == "ema":
+            ema_new = cfg.ema_decay * ema + (1.0 - cfg.ema_decay) * e_rec
+            rel = abs(ema - ema_new) / max(abs(ema_new), 1e-30)
+            ema = ema_new
+        else:
+            rel = abs(energies[-2] - e_rec) / max(abs(e_rec), 1e-30)
+        if ckpt is not None and it % cfg.checkpoint_every == 0:
+            save(it)
+        if rel < cfg.tol:
+            converged = True
+            break
+        if fused_step is not None:
+            E = E_new
+        if cfg.max_seconds is not None and now > cfg.max_seconds:
+            break
+    save(it)
+
+    return EngineResult(
+        X=X,
+        energies=np.asarray(energies),
+        grad_norms=np.asarray(gnorms),
+        step_sizes=np.asarray(steps),
+        times=np.asarray(times),
+        n_fevals=np.asarray(fevals),
+        n_iters=it - start_it,
+        converged=converged,
+        setup_time=setup_time,
+        resumed_from=resumed_from,
+        state=state,
+    )

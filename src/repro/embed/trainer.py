@@ -2,20 +2,24 @@
 (affinities -> spectral init -> SD optimization) on an arbitrary mesh,
 with checkpoint/restart.
 
-On the production mesh the N x N affinities are 2-D sharded and the solve is
-block-Jacobi (DESIGN.md §3.4); on a single device the same code runs with a
-(1, 1) mesh, which is how the CPU tests exercise every code path.
+The optimization loop itself lives in embed/engine.py (`fit_loop`); this
+module contributes the mesh-aware `Objective` backends:
 
-`EmbedConfig(sparse=True)` switches to the O(N (k + m) d) neighbor-graph
-pipeline (docs/sparse.md): k-NN affinities in ELL storage, negative-sampled
-repulsion, and a matrix-free Jacobi-CG spectral direction — no (N, N) array
-anywhere, which is what unlocks N >> 10^4.  The sparse path currently runs
-on one device (multi-device sparse sharding is a ROADMAP open item).
+  * dense 2-D-sharded: the N x N affinities are 2-D sharded and the solve
+    is block-Jacobi (DESIGN.md §3.4); on a single device the same code runs
+    with a (1, 1) mesh, which is how the CPU tests exercise every code path.
+  * sparse single-device: `EmbedConfig(sparse=True)` switches to the
+    O(N (k + m) d) neighbor-graph pipeline (docs/sparse.md) — k-NN
+    affinities in ELL storage, negative-sampled repulsion, matrix-free
+    Jacobi-CG spectral direction; no (N, N) array anywhere.
+  * sparse row-sharded: the same pipeline on a multi-device mesh, with the
+    ELL graph + reverse graph row-sharded (sparse/sharding.py).  Mesh
+    shapes the sparse path can't use (a >1-sized column axis) are rejected
+    with a clear error.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable
 
 import jax
@@ -23,11 +27,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.ckpt import Checkpointer
 from repro.core import (energy_and_grad_sparse, is_normalized,
                         laplacian_eigenmaps, make_affinities)
 from repro.core.linesearch import LSConfig
-from repro.sparse import make_sd_operator, pcg, sparse_affinities, to_dense
+from repro.sparse import (make_sd_operator, make_sharded_energy_grad,
+                          make_sharded_sd_operator, pcg,
+                          shard_sparse_affinities, sparse_affinities,
+                          sparse_laplacian_eigenmaps, to_dense,
+                          validate_sparse_mesh)
 
 from .distributed import (
     EmbedMeshSpec,
@@ -38,6 +45,7 @@ from .distributed import (
     shard_pairwise,
     shard_rows,
 )
+from .engine import EngineResult, LoopConfig, fit_loop
 
 Array = jnp.ndarray
 
@@ -69,37 +77,6 @@ class EmbedConfig:
     cg_maxiter: int = 100
 
 
-def _initial_step(X, P, alpha_prev: float, ls: LSConfig) -> float:
-    """Adaptive-grow initial trial step with the trust cap, as in
-    core.minimize (host-side mirror for the trainer's python loops)."""
-    alpha0 = min(alpha_prev / ls.rho, 1.0)
-    if ls.max_rel_move is not None:
-        xc = X - jnp.mean(X, axis=0, keepdims=True)
-        scale = float(jnp.sqrt(jnp.mean(xc * xc))) + 1e-3
-        p_rms = float(jnp.sqrt(jnp.mean(P * P))) + 1e-30
-        alpha0 = min(alpha0, ls.max_rel_move * scale / p_rms)
-    return alpha0
-
-
-def _host_backtrack(energy_of, X, e0: float, G, P, alpha0: float,
-                    ls: LSConfig) -> tuple[float, float]:
-    """Armijo backtracking with host-side floats (one energy eval per
-    trial); shared by the dense and sparse fit loops.  Returns the
-    accepted (alpha, E(X + alpha P)) — the energy is always evaluated AT
-    the accepted alpha, including on backtrack exhaustion (where alpha
-    shrinks once more after the last failed trial)."""
-    gtp = float(jnp.vdot(G, P))
-    alpha = alpha0
-    for _ in range(ls.max_backtracks):
-        e_new = energy_of(X + alpha * P)
-        if e_new <= e0 + ls.c1 * alpha * gtp:
-            break
-        alpha *= ls.rho
-    else:
-        e_new = energy_of(X + alpha * P)
-    return alpha, e_new
-
-
 @dataclasses.dataclass
 class FitResult:
     X: Array
@@ -107,6 +84,73 @@ class FitResult:
     times: np.ndarray
     n_iters: int
     resumed_from: int | None
+
+
+def _to_fit_result(res: EngineResult) -> FitResult:
+    return FitResult(X=res.X, energies=res.energies, times=res.times,
+                     n_iters=res.n_iters, resumed_from=res.resumed_from)
+
+
+class _DenseMeshObjective:
+    """Dense 2-D-sharded backend: distributed energy/grad + block-Jacobi
+    direction solves.  Deterministic (key is ignored)."""
+
+    stochastic = False
+
+    def __init__(self, emb: "DistributedEmbedding", Wp, Wm, lam):
+        self._emb = emb
+        self._Wp, self._Wm, self._lam = Wp, Wm, lam
+
+    def energy_and_grad(self, X, key):
+        return self._emb._eg(X, self._Wp, self._Wm, self._lam)
+
+    def energy(self, X, key):
+        return self._emb._eg(X, self._Wp, self._Wm, self._lam)[0]
+
+    def make_direction_solver(self):
+        emb = self._emb
+        R = emb._bj_setup(self._Wp)              # block-Jacobi factors
+
+        def solve(state, X, G):
+            G_sh = shard_rows(emb.mesh, emb.spec, G)
+            P = emb._bj_solve(R, G_sh)
+            return replicate(emb.mesh, P), state
+
+        return solve, ()
+
+    def place(self, X):
+        return replicate(self._emb.mesh, X)
+
+
+class _SparseObjective:
+    """Sparse backend over prebuilt jitted (eg, e_only, cg-solve) closures;
+    identical shape for the single-device and row-sharded variants.
+    Stochastic: the engine draws one fold_in key per iteration, so the line
+    search descends a deterministic surrogate (common random numbers) and
+    convergence is tested on an EMA of the surrogate energies."""
+
+    stochastic = True
+
+    def __init__(self, eg, e_only, solve, X0, place=None):
+        self._eg, self._e_only, self._solve = eg, e_only, solve
+        self._X0 = X0
+        self._place = place
+
+    def energy_and_grad(self, X, key):
+        return self._eg(X, key)
+
+    def energy(self, X, key):
+        return self._e_only(X, key)
+
+    def make_direction_solver(self):
+        def solve(prev_P, X, G):
+            P = self._solve(G, jnp.asarray(prev_P))   # CG warm start
+            return P, P
+
+        return solve, jnp.zeros_like(self._X0)
+
+    def place(self, X):
+        return self._place(X) if self._place is not None else X
 
 
 class DistributedEmbedding:
@@ -129,6 +173,14 @@ class DistributedEmbedding:
         self._bj_setup = make_block_jacobi_setup(mesh, spec, cfg.mu_scale)
         self._bj_solve = make_block_jacobi_solve(mesh, spec)
 
+    def _loop_cfg(self) -> LoopConfig:
+        cfg = self.cfg
+        return LoopConfig(
+            max_iters=cfg.max_iters, tol=cfg.tol, ls=cfg.ls,
+            checkpoint_dir=cfg.checkpoint_dir,
+            checkpoint_every=cfg.checkpoint_every, seed=cfg.seed,
+        )
+
     # -- data preparation ---------------------------------------------------
     def prepare(self, Y: Array):
         """Affinities + spectral init, placed on the mesh."""
@@ -148,83 +200,27 @@ class DistributedEmbedding:
             return self._fit_sparse(Y, X0, callback)
         Wp, Wm, X_init = self.prepare(Y)
         X = replicate(self.mesh, X0) if X0 is not None else X_init
-        R = self._bj_setup(Wp)                     # block-Jacobi factors
         lam = jnp.asarray(cfg.lam, X.dtype)
-
-        ckpt = (Checkpointer(cfg.checkpoint_dir)
-                if cfg.checkpoint_dir else None)
-        start_it, resumed_from = 0, None
-        if ckpt is not None:
-            latest = ckpt.latest_step()
-            if latest is not None:
-                X = ckpt.restore(latest, X)
-                X = replicate(self.mesh, X)
-                start_it, resumed_from = latest, latest
-
-        E, G = self._eg(X, Wp, Wm, lam)
-        energies = [float(E)]
-        times = [0.0]
-        alpha_prev = 1.0
-        t0 = time.perf_counter()
-        it = start_it
-        for it in range(start_it + 1, cfg.max_iters + 1):
-            X, E_new, G, alpha_prev = self._step(
-                X, Wp, Wm, lam, G, E, R, alpha_prev)
-            e_new = float(E_new)
-            energies.append(e_new)
-            times.append(time.perf_counter() - t0)
-            if callback is not None:
-                callback(it, X, e_new)
-            if ckpt is not None and it % cfg.checkpoint_every == 0:
-                ckpt.save(it, X)
-            rel = abs(energies[-2] - e_new) / max(abs(e_new), 1e-30)
-            if rel < cfg.tol:
-                break
-            E = E_new
-        if ckpt is not None:
-            ckpt.save(it, X)
-        return FitResult(
-            X=X, energies=np.asarray(energies), times=np.asarray(times),
-            n_iters=it - start_it, resumed_from=resumed_from,
-        )
-
-    def _step(self, X, Wp, Wm, lam, G, E, R, alpha_prev):
-        """One SD iteration: block-Jacobi solve + host-side backtracking."""
-        cfg = self.cfg
-        G_sh = shard_rows(self.mesh, self.spec, G)
-        P = self._bj_solve(R, G_sh)
-        P = replicate(self.mesh, P)
-        alpha0 = _initial_step(X, P, alpha_prev, cfg.ls)
-        alpha, _ = _host_backtrack(
-            lambda Xn: float(self._eg(Xn, Wp, Wm, lam)[0]),
-            X, float(E), G, P, alpha0, cfg.ls)
-        X_new = X + alpha * P
-        E_new, G_new = self._eg(X_new, Wp, Wm, lam)
-        return X_new, E_new, G_new, alpha
+        obj = _DenseMeshObjective(self, Wp, Wm, lam)
+        return _to_fit_result(fit_loop(obj, X, self._loop_cfg(), callback))
 
     # -- sparse pipeline ----------------------------------------------------
     def _sparse_init(self, saff, n: int):
-        """Spectral init when a dense eigendecomposition is affordable,
-        random small-scale init above that (sparse eigenmaps: ROADMAP)."""
+        """Spectral init: dense eigendecomposition while affordable, block
+        power iteration on the ELL graph above that (sparse/linalg.py)."""
         cfg = self.cfg
         if n <= 2048:
             A = to_dense(saff.graph)
             return laplacian_eigenmaps(0.5 * (A + A.T), cfg.dim) * 0.1
-        key = jax.random.PRNGKey(cfg.seed)
-        return 1e-2 * jax.random.normal(key, (n, cfg.dim), dtype=jnp.float32)
+        return sparse_laplacian_eigenmaps(
+            saff.graph, saff.rev, d=cfg.dim, seed=cfg.seed) * 0.1
 
     def _fit_sparse(self, Y: Array, X0: Array | None,
                     callback: Callable[[int, Array, float], None] | None
                     ) -> FitResult:
         """O(N (k + m) d) per iteration: ELL affinities, negative-sampled
-        repulsion, matrix-free Jacobi-CG spectral direction.
-
-        The repulsive energy is stochastic; each iteration fixes one PRNG
-        key, so the backtracking line search descends a deterministic
-        per-iteration surrogate (common random numbers).  Convergence is
-        tested on an exponential moving average of the surrogate energies
-        (a raw rel-change test would fire on sampling noise).
-        """
+        repulsion, matrix-free Jacobi-CG spectral direction.  On a
+        multi-device mesh the graph is row-sharded (sparse/sharding.py)."""
         cfg = self.cfg
         if is_normalized(cfg.kind):
             # fail fast — energy_and_grad_sparse would only raise after the
@@ -241,72 +237,50 @@ class DistributedEmbedding:
                 f"k-candidate entropy cannot reach log(perplexity), so the "
                 f"calibration would silently degenerate to uniform weights; "
                 f"use n_neighbors >= 3 * perplexity (or 0 for auto)")
+        multi_device = self.mesh.devices.size > 1
+        if multi_device:
+            # fail fast on unusable mesh shapes, before the k-NN build
+            validate_sparse_mesh(self.mesh, self.spec.row_axes)
         lam = jnp.asarray(cfg.lam, jnp.float32)
         saff = sparse_affinities(jnp.asarray(Y), k=k,
                                  perplexity=cfg.perplexity, model=cfg.kind,
                                  method=cfg.knn_method)
         X = jnp.asarray(X0) if X0 is not None else self._sparse_init(saff, n)
 
-        matvec, inv_diag, _ = make_sd_operator(saff.graph, saff.rev,
-                                               cfg.mu_scale)
+        if multi_device:
+            sg = shard_sparse_affinities(self.mesh, self.spec.row_axes, saff)
+            eg_l, e_l = make_sharded_energy_grad(
+                self.mesh, self.spec.row_axes, sg, cfg.kind,
+                n_negatives=cfg.n_negatives)
+            eg = lambda X, key: eg_l(X, lam, key)
+            e_only = lambda X, key: e_l(X, lam, key)
+            matvec, inv_diag, _ = make_sharded_sd_operator(
+                self.mesh, self.spec.row_axes, sg, saff, cfg.mu_scale)
+            place = lambda X: replicate(self.mesh, X)
+            X = place(X)
+        else:
+            matvec, inv_diag, _ = make_sd_operator(saff.graph, saff.rev,
+                                                   cfg.mu_scale)
 
-        @jax.jit
-        def eg(X, key):
-            return energy_and_grad_sparse(
-                X, saff, cfg.kind, lam, n_negatives=cfg.n_negatives, key=key)
+            @jax.jit
+            def eg(X, key):
+                return energy_and_grad_sparse(
+                    X, saff, cfg.kind, lam,
+                    n_negatives=cfg.n_negatives, key=key)
 
-        @jax.jit
-        def e_only(X, key):
-            # line-search trials need no gradient: ~half the work
-            return energy_and_grad_sparse(
-                X, saff, cfg.kind, lam, n_negatives=cfg.n_negatives, key=key,
-                with_grad=False)[0]
+            @jax.jit
+            def e_only(X, key):
+                # line-search trials need no gradient: ~half the work
+                return energy_and_grad_sparse(
+                    X, saff, cfg.kind, lam, n_negatives=cfg.n_negatives,
+                    key=key, with_grad=False)[0]
+
+            place = None
 
         @jax.jit
         def solve(G, P0):
             return pcg(matvec, -G, P0, inv_diag=inv_diag,
                        tol=cfg.cg_tol, maxiter=cfg.cg_maxiter).x
 
-        ckpt = (Checkpointer(cfg.checkpoint_dir)
-                if cfg.checkpoint_dir else None)
-        start_it, resumed_from = 0, None
-        if ckpt is not None:
-            latest = ckpt.latest_step()
-            if latest is not None:
-                X = ckpt.restore(latest, X)
-                start_it, resumed_from = latest, latest
-
-        key0 = jax.random.PRNGKey(cfg.seed + 1)
-        E, G = eg(X, jax.random.fold_in(key0, start_it))
-        energies = [float(E)]
-        times = [0.0]
-        alpha_prev, ema, P = 1.0, float(E), jnp.zeros_like(X)
-        t0 = time.perf_counter()
-        it = start_it
-        for it in range(start_it + 1, cfg.max_iters + 1):
-            key = jax.random.fold_in(key0, it)
-            E, G = eg(X, key)                    # this iteration's surrogate
-            P = solve(G, P)
-            alpha0 = _initial_step(X, P, alpha_prev, cfg.ls)
-            alpha, e_new = _host_backtrack(
-                lambda Xn: float(e_only(Xn, key)),
-                X, float(E), G, P, alpha0, cfg.ls)
-            X = X + alpha * P
-            alpha_prev = alpha
-            energies.append(e_new)
-            times.append(time.perf_counter() - t0)
-            if callback is not None:
-                callback(it, X, e_new)
-            if ckpt is not None and it % cfg.checkpoint_every == 0:
-                ckpt.save(it, X)
-            ema_new = 0.9 * ema + 0.1 * e_new
-            if abs(ema - ema_new) / max(abs(ema_new), 1e-30) < cfg.tol:
-                ema = ema_new
-                break
-            ema = ema_new
-        if ckpt is not None:
-            ckpt.save(it, X)
-        return FitResult(
-            X=X, energies=np.asarray(energies), times=np.asarray(times),
-            n_iters=it - start_it, resumed_from=resumed_from,
-        )
+        obj = _SparseObjective(eg, e_only, solve, X, place=place)
+        return _to_fit_result(fit_loop(obj, X, self._loop_cfg(), callback))

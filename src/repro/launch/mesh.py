@@ -21,6 +21,36 @@ try:
 except ImportError:  # jax < 0.5: no explicit axis types (Auto is implied)
     AxisType = None
 
+# jax >= 0.6 promotes shard_map to the top-level namespace; older releases
+# (the container pins 0.4.37) keep it in jax.experimental.  Shared here so
+# every shard_map user (embed/distributed.py, sparse/sharding.py) sees the
+# same symbol without re-implementing the probe.
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # pragma: no cover - exercised on old jax only
+    from jax.experimental.shard_map import shard_map
+
+
+def axis_size(ax: str):
+    """jax.lax.axis_size is a recent addition; psum(1) is the portable
+    spelling of "size of this named axis" inside shard_map."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(ax)
+    return jax.lax.psum(1, ax)
+
+
+def linear_row_index(row_axes: tuple[str, ...]):
+    """Linear (row-major) block index of this device across `row_axes`,
+    inside a shard_map body — the mapping every row-sharded layout
+    (embed/distributed.py, sparse/sharding.py) uses to find its global
+    row offset, matching the P(row_axes, ...) shard order."""
+    import jax.numpy as jnp
+
+    idx = jnp.asarray(0, jnp.int32)
+    for ax in row_axes:
+        idx = idx * axis_size(ax) + jax.lax.axis_index(ax)
+    return idx
+
 
 def axis_types_kwargs(n_axes: int) -> dict:
     """`{"axis_types": (Auto,) * n}` where supported, else `{}`."""

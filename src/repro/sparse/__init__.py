@@ -19,8 +19,17 @@ from .linalg import (
     make_sd_operator,
     out_degree,
     pcg,
+    sparse_laplacian_eigenmaps,
     sym_degree,
     sym_lap_matvec,
+    sym_matvec,
+)
+from .sharding import (
+    ShardedSparseGraph,
+    make_sharded_energy_grad,
+    make_sharded_sd_operator,
+    shard_sparse_affinities,
+    validate_sparse_mesh,
 )
 
 __all__ = [
@@ -28,5 +37,9 @@ __all__ = [
     "from_dense", "knn_graph", "reverse_graph", "sparse_affinities",
     "to_dense",
     "ell_matvec", "ell_t_matvec", "in_degree", "make_sd_operator",
-    "out_degree", "pcg", "sym_degree", "sym_lap_matvec",
+    "out_degree", "pcg", "sparse_laplacian_eigenmaps", "sym_degree",
+    "sym_lap_matvec", "sym_matvec",
+    "ShardedSparseGraph", "make_sharded_energy_grad",
+    "make_sharded_sd_operator", "shard_sparse_affinities",
+    "validate_sparse_mesh",
 ]

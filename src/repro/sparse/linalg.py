@@ -21,6 +21,7 @@ calibrated row degrees are O(1).
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable, NamedTuple
 
 import jax
@@ -96,6 +97,62 @@ def make_sd_operator(g: NeighborGraph, rev: NeighborGraph | None,
         return 4.0 * sym_lap_matvec(g, V, rev=rev) + mu * V
 
     return matvec, inv_diag, mu
+
+
+def sym_matvec(g: NeighborGraph, X: Array,
+               rev: NeighborGraph | None = None) -> Array:
+    """W @ X for the implicit W = (A + A^T)/2.  With `rev` both halves are
+    row gathers; without it the transpose half is a scatter-add."""
+    ax = ell_matvec(g, X)
+    atx = ell_matvec(rev, X) if rev is not None else ell_t_matvec(g, X)
+    return 0.5 * (ax + atx)
+
+
+@functools.partial(jax.jit, static_argnames=("d", "n_iters", "oversample"))
+def sparse_laplacian_eigenmaps(g: NeighborGraph,
+                               rev: NeighborGraph | None = None,
+                               d: int = 2, n_iters: int = 300,
+                               oversample: int = 6, seed: int = 0) -> Array:
+    """Laplacian-eigenmaps init from ELL storage: O(N k d) per sweep, no
+    (N, N) array — the sparse analogue of core.spectral_init.
+
+    Same spectral problem as `laplacian_eigenmaps` (bottom nontrivial
+    eigenvectors of the normalized Laplacian, i.e. TOP eigenvectors of
+    M = D^{-1/2} W D^{-1/2}), solved by block subspace iteration on the
+    shifted operator M + I (spectrum in [0, 2], so the algebraically
+    largest eigenvalues are also largest in magnitude and the iteration
+    cannot lock onto a negative tail mode), followed by a Rayleigh-Ritz
+    projection to sort/clean the Ritz vectors.  The block carries
+    `oversample` extra vectors so the wanted d+1 converge at the (much
+    larger) gap to lambda_{d+1+oversample} instead of a possibly tiny
+    lambda_{d+1} / lambda_{d+2} gap.  Matches the dense routine's gauge:
+    drop the trivial top eigenvector, map back through D^{-1/2}, center,
+    unit std per dimension."""
+    n = g.n
+    dg = jnp.maximum(sym_degree(g) if rev is None
+                     else 0.5 * (out_degree(g) + out_degree(rev)), 1e-12)
+    dinv = 1.0 / jnp.sqrt(dg)
+
+    def Mv(V):
+        return dinv[:, None] * sym_matvec(g, dinv[:, None] * V, rev=rev)
+
+    V = jax.random.normal(jax.random.PRNGKey(seed),
+                          (n, min(d + 1 + oversample, n)),
+                          dtype=g.weights.dtype)
+    V, _ = jnp.linalg.qr(V)
+
+    def sweep(_, V):
+        V, _ = jnp.linalg.qr(Mv(V) + V)
+        return V
+
+    V = jax.lax.fori_loop(0, n_iters, sweep, V)
+    # Rayleigh-Ritz: order the converged subspace by eigenvalue of M
+    T = V.T @ Mv(V)
+    _, S = jnp.linalg.eigh(0.5 * (T + T.T))    # ascending
+    U = V @ S[:, ::-1]                          # descending: col 0 trivial
+    X = dinv[:, None] * U[:, 1:d + 1]
+    X = X - jnp.mean(X, axis=0, keepdims=True)
+    return X / jnp.maximum(jnp.std(X, axis=0, keepdims=True), 1e-12)
 
 
 # -- preconditioned CG ----------------------------------------------------------

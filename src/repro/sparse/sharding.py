@@ -1,0 +1,262 @@
+"""Row-sharded sparse backend: the ELL neighbor graph on a device mesh.
+
+Multi-device analogue of the single-device sparse pipeline
+(sparse/linalg.py + core/objectives.energy_and_grad_sparse), built on
+`shard_map` over the mesh's row axes:
+
+  * the directed ELL graph AND its precomputed reverse (transpose) graph
+    are row-sharded `P(row_axes, None)` — the reverse graph is what makes
+    the implicit symmetrization W = (A + Aᵀ)/2 gather-only per shard, so
+    no all-to-all and no scatter anywhere in the hot path;
+  * X (N, d) is replicated — a "replicated-X epoch": each shard gathers
+    arbitrary neighbor rows of X locally, and re-replicating the updated
+    rows costs one O(N·d) psum per application, the same order as the
+    dense path's gradient psum (NOT O(N·k));
+  * only the energy/degree scalars are additionally psum'd.
+
+The CG hot loop (sparse/linalg.pcg) runs unchanged on replicated (N, d)
+arrays; only the operator application is shard_mapped, and it stays
+scatter-free per shard.  Negative sampling keeps the cyclic-shift
+structure of `energy_and_grad_sparse`: the transpose of the sampled edge
+set is the negated shifts, so the reverse half of the repulsive Laplacian
+is again a local gather — b_rev[n, j] is recomputed from the symmetric
+distance ‖x_n − x_{(n−s_j) mod N}‖² instead of being fetched from another
+shard's b.
+
+Rows are padded to a multiple of the row-group count; padded rows carry
+zero weights (exact-zero contribution, the ELL padding invariant) and are
+masked out of the negative-sampling terms.
+
+The mesh may have extra (column) axes only at size 1: the ELL arrays are
+one-dimensional in the row direction, so there is nothing to shard a >1
+column axis over — `validate_sparse_mesh` rejects such shapes with a
+clear error instead of silently running replicated.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.objectives import negative_pair_terms
+from repro.launch.mesh import linear_row_index, shard_map
+
+from .graph import SparseAffinities, reverse_graph
+from .linalg import make_sd_operator
+
+Array = jnp.ndarray
+
+
+class ShardedSparseGraph(NamedTuple):
+    """Row-sharded, row-padded ELL graph + reverse graph on a mesh."""
+
+    indices: Array       # (n_pad, k) int32, P(row_axes, None)
+    weights: Array       # (n_pad, k)
+    rev_indices: Array   # (n_pad, k_rev) int32
+    rev_weights: Array   # (n_pad, k_rev)
+    n: int               # true row count (n_pad - n padded zero rows)
+    n_pad: int
+
+
+def validate_sparse_mesh(mesh: Mesh, row_axes: tuple[str, ...]) -> None:
+    """Raise for mesh shapes the row-sharded sparse path can't use."""
+    for ax in row_axes:
+        if ax not in mesh.shape:
+            raise ValueError(
+                f"row axis {ax!r} not in mesh axes {tuple(mesh.shape)}")
+    bad = {ax: s for ax, s in mesh.shape.items()
+           if ax not in row_axes and s != 1}
+    if bad:
+        raise ValueError(
+            f"sparse=True shards the ELL graph over rows only "
+            f"({row_axes!r}); every other mesh axis must have size 1, got "
+            f"{bad}.  Reshape the mesh so all devices sit on the row axes "
+            f"(e.g. (n_devices, 1) for a ('data', 'model') mesh).")
+
+
+def _row_groups(mesh: Mesh, row_axes: tuple[str, ...]) -> int:
+    g = 1
+    for ax in row_axes:
+        g *= mesh.shape[ax]
+    return g
+
+
+def shard_sparse_affinities(mesh: Mesh, row_axes: tuple[str, ...],
+                            saff: SparseAffinities) -> ShardedSparseGraph:
+    """Pad the ELL arrays to a row-group multiple and place them row-sharded.
+
+    Padded rows get index 0 / weight 0 — a zero-weight edge contributes
+    exactly zero to every operator, and index 0 keeps gathers in bounds.
+    """
+    validate_sparse_mesh(mesh, row_axes)
+    g = saff.graph
+    rev = saff.rev if saff.rev is not None else reverse_graph(g)
+    n = g.n
+    groups = _row_groups(mesh, row_axes)
+    nb = -(-n // groups)
+    n_pad = nb * groups
+    spec = NamedSharding(mesh, P(row_axes, None))
+
+    def pad_place(a, pad_value):
+        a = jnp.pad(a, ((0, n_pad - n), (0, 0)),
+                    constant_values=pad_value)
+        return jax.device_put(a, spec)
+
+    return ShardedSparseGraph(
+        indices=pad_place(g.indices.astype(jnp.int32), 0),
+        weights=pad_place(g.weights, 0),
+        rev_indices=pad_place(rev.indices.astype(jnp.int32), 0),
+        rev_weights=pad_place(rev.weights, 0),
+        n=n, n_pad=n_pad,
+    )
+
+
+def _directed_lap_local(xi, Xp, idx, w):
+    """Local rows of L(A) X: row gather from the replicated X — the
+    per-shard, scatter-free form of kernels.ref.ell_lap_matvec_ref."""
+    return (jnp.sum(w, axis=-1, keepdims=True) * xi
+            - jnp.einsum("nk,nkd->nd", w, Xp[idx]))
+
+
+def make_sharded_energy_grad(mesh: Mesh, row_axes: tuple[str, ...],
+                             sg: ShardedSparseGraph, kind: str,
+                             n_negatives: int | None = 5):
+    """Returns jitted `eg(X, lam, key) -> (E, G)` and
+    `e_only(X, lam, key) -> E` (the line-search fast path), both numerically
+    matching the single-device `energy_and_grad_sparse` on the same graph
+    and PRNG key (same shift draw, same per-pair math; only partial-sum
+    order differs)."""
+    negative_pair_terms(kind, jnp.zeros(()))  # reject bad kinds at build
+    n, n_pad = sg.n, sg.n_pad
+    all_axes = tuple(mesh.axis_names)
+    exhaustive = n_negatives is None or n_negatives >= n - 1
+
+    def body(with_grad, Xp, shifts, lam, scale, idx, w, ridx, rw):
+        nb = idx.shape[0]
+        row0 = linear_row_index(row_axes) * nb
+        xi = jax.lax.dynamic_slice_in_dim(Xp, row0, nb, 0)
+        rows_g = row0 + jnp.arange(nb, dtype=jnp.int32)
+        live = (rows_g < n).astype(Xp.dtype)[:, None]          # (nb, 1)
+
+        # attractive: exact over the local ELL rows (t is symmetric, so the
+        # directed sum needs no transpose pass for the energy)
+        xj = Xp[idx]                                           # (nb, k, d)
+        diff = xi[:, None, :] - xj
+        e_plus = jnp.sum(w * jnp.sum(diff * diff, axis=-1))
+
+        # repulsive: cyclic-shift negatives at the global row ids
+        J = (rows_g[:, None] + shifts[None, :]) % n            # (nb, m)
+        t_neg = jnp.sum((xi[:, None, :] - Xp[J]) ** 2, axis=-1)
+        s_pair, b = negative_pair_terms(kind, t_neg)
+        s_hat = scale * jnp.sum(live * s_pair)
+
+        E = (jax.lax.psum(e_plus, all_axes)
+             + lam * jax.lax.psum(s_hat, all_axes))
+        if not with_grad:
+            return E
+
+        # both symmetrization halves as local gathers: A via the local
+        # graph rows, A^T via the local reverse-graph rows
+        la_x = 0.5 * (_directed_lap_local(xi, Xp, idx, w)
+                      + _directed_lap_local(xi, Xp, ridx, rw))
+
+        # reverse negative half: the transpose of shift +s_j is shift -s_j
+        # at the SAME per-edge weight, which is a pure function of the
+        # symmetric distance — recompute it locally instead of fetching
+        # b from the source row's shard
+        b = live * b
+        Jr = (rows_g[:, None] - shifts[None, :]) % n
+        t_rev = jnp.sum((xi[:, None, :] - Xp[Jr]) ** 2, axis=-1)
+        b_rev = live * negative_pair_terms(kind, t_rev)[1]
+        fwd = (jnp.sum(b, axis=1, keepdims=True) * xi
+               - jnp.einsum("nm,nmd->nd", b, Xp[J]))
+        bwd = (jnp.sum(b_rev, axis=1, keepdims=True) * xi
+               - jnp.einsum("nm,nmd->nd", b_rev, Xp[Jr]))
+        lb_x = 0.5 * scale * (fwd + bwd)
+
+        G_loc = 4.0 * (la_x - lam * lb_x)
+        G = jnp.zeros_like(Xp)
+        G = jax.lax.dynamic_update_slice_in_dim(G, G_loc, row0, 0)
+        return E, jax.lax.psum(G, all_axes)                    # O(N d) comm
+
+    ell_specs = (P(row_axes, None),) * 4
+    smap_eg = shard_map(
+        functools.partial(body, True), mesh=mesh,
+        in_specs=(P(), P(), P(), P()) + ell_specs,
+        out_specs=(P(), P()),
+    )
+    smap_e = shard_map(
+        functools.partial(body, False), mesh=mesh,
+        in_specs=(P(), P(), P(), P()) + ell_specs,
+        out_specs=P(),
+    )
+
+    def _shifts(key, dtype):
+        if exhaustive:
+            return (jnp.arange(1, n, dtype=jnp.int32),
+                    jnp.asarray(1.0, dtype))
+        shifts = 1 + jax.random.choice(
+            key, n - 1, shape=(n_negatives,), replace=False).astype(jnp.int32)
+        return shifts, jnp.asarray((n - 1) / n_negatives, dtype)
+
+    def _prep(X, lam, key):
+        shifts, scale = _shifts(key, X.dtype)
+        Xp = jnp.pad(X, ((0, n_pad - n), (0, 0)))
+        return Xp, shifts, jnp.asarray(lam, X.dtype), scale
+
+    @jax.jit
+    def eg(X, lam, key):
+        E, Gp = smap_eg(*_prep(X, lam, key), sg.indices, sg.weights,
+                        sg.rev_indices, sg.rev_weights)
+        return E, Gp[:n]
+
+    @jax.jit
+    def e_only(X, lam, key):
+        return smap_e(*_prep(X, lam, key), sg.indices, sg.weights,
+                      sg.rev_indices, sg.rev_weights)
+
+    return eg, e_only
+
+
+def make_sharded_sd_operator(mesh: Mesh, row_axes: tuple[str, ...],
+                             sg: ShardedSparseGraph,
+                             saff: SparseAffinities,
+                             mu_scale: float = 1e-5):
+    """(matvec, inv_diag, mu) for B = 4 L((A + Aᵀ)/2) + mu I with the
+    Laplacian application row-sharded.
+
+    The Jacobi diagonal and mu come from `sparse.linalg.make_sd_operator`
+    on the UNSHARDED graph (a build-time scatter is fine), so the sharded
+    CG solves the bit-identical system; only the single-device matvec is
+    discarded.  The per-iteration matvec is shard_mapped: local gathers
+    for both halves, one O(N d) psum to re-replicate."""
+    _, inv_diag, mu = make_sd_operator(saff.graph, saff.rev, mu_scale)
+    n, n_pad = sg.n, sg.n_pad
+    all_axes = tuple(mesh.axis_names)
+
+    def body(Vp, idx, w, ridx, rw):
+        nb = idx.shape[0]
+        row0 = linear_row_index(row_axes) * nb
+        vi = jax.lax.dynamic_slice_in_dim(Vp, row0, nb, 0)
+        # 4 * 0.5 * (L(A) V + L(A^T) V)
+        out_loc = 2.0 * (_directed_lap_local(vi, Vp, idx, w)
+                         + _directed_lap_local(vi, Vp, ridx, rw))
+        out = jnp.zeros_like(Vp)
+        out = jax.lax.dynamic_update_slice_in_dim(out, out_loc, row0, 0)
+        return jax.lax.psum(out, all_axes)
+
+    smap = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(),) + (P(row_axes, None),) * 4,
+        out_specs=P(),
+    )
+
+    def matvec(V):
+        Vp = jnp.pad(V, ((0, n_pad - n), (0, 0)))
+        return (smap(Vp, sg.indices, sg.weights,
+                     sg.rev_indices, sg.rev_weights)[:n] + mu * V)
+
+    return matvec, inv_diag, mu

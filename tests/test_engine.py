@@ -1,0 +1,114 @@
+"""Unified fit engine (embed/engine.py): bit-identity of the refactored
+core.minimize, and checkpoint/resume reproducibility through the engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (GD, SD, LSConfig, energy_and_grad, laplacian_eigenmaps,
+                        make_affinities, minimize)
+from repro.core.minimize import _step
+from repro.embed import DistributedEmbedding, EmbedConfig
+from tests.conftest import three_loops
+
+
+@pytest.fixture(scope="module")
+def problem():
+    Y = three_loops(n_per=16, loops=2, dim=8)
+    aff = make_affinities(Y, 8.0, model="ee")
+    X0 = laplacian_eigenmaps(aff.Wp, 2) * 0.1
+    return Y, aff, X0
+
+
+def _seed_minimize(X0, aff, kind, lam, strategy, max_iters, tol, ls_cfg):
+    """The pre-engine core.minimize driver loop, pinned verbatim (minus
+    timing): the engine's fused-step path must reproduce it bit-for-bit."""
+    lam = jnp.asarray(lam, dtype=X0.dtype)
+    state = jax.block_until_ready(strategy.init(X0, aff, kind, lam))
+    E, G = jax.block_until_ready(energy_and_grad(X0, aff, kind, lam))
+    X = X0
+    alpha = jnp.asarray(1.0, dtype=X0.dtype)
+    energies = [float(E)]
+    gnorms = [float(jnp.linalg.norm(G))]
+    steps: list[float] = []
+    fevals = [1]
+    converged = False
+    it = 0
+    for it in range(1, max_iters + 1):
+        X, E_new, G, state, alpha, ne = jax.block_until_ready(
+            _step(strategy, kind, ls_cfg, X, E, G, state, alpha,
+                  aff.Wp, aff.Wm, lam))
+        energies.append(float(E_new))
+        gnorms.append(float(jnp.linalg.norm(G)))
+        steps.append(float(alpha))
+        fevals.append(fevals[-1] + int(ne))
+        rel = abs(energies[-2] - energies[-1]) / max(abs(energies[-1]), 1e-30)
+        if rel < tol:
+            converged = True
+            break
+        E = E_new
+    return X, energies, gnorms, steps, fevals, it, converged
+
+
+@pytest.mark.parametrize("strategy,ls_cfg", [
+    (SD(), LSConfig(init_step="adaptive_grow")),
+    (SD(), LSConfig(init_step="adaptive")),
+    (GD(), LSConfig()),
+])
+def test_minimize_bit_identical_to_seed_driver(problem, strategy, ls_cfg):
+    _, aff, X0 = problem
+    X, energies, gnorms, steps, fevals, n_iters, converged = _seed_minimize(
+        X0, aff, "ee", 50.0, strategy, 20, 1e-6, ls_cfg)
+    res = minimize(X0, aff, "ee", 50.0, strategy, max_iters=20, tol=1e-6,
+                   ls_cfg=ls_cfg)
+    np.testing.assert_array_equal(np.asarray(X), np.asarray(res.X))
+    assert energies == list(res.energies)
+    assert gnorms == list(res.grad_norms)
+    assert steps == list(res.step_sizes)
+    assert fevals == list(res.n_fevals)
+    assert n_iters == res.n_iters
+    assert converged == res.converged
+
+
+@pytest.mark.parametrize("sparse", [False, True],
+                         ids=["dense-mesh", "sparse"])
+def test_resume_replays_uninterrupted_trace(tmp_path, sparse):
+    """Interrupted-vs-uninterrupted runs produce IDENTICAL energy traces:
+    the checkpoint payload carries the line-search and solver state, and
+    (on the sparse path) the per-iteration fold_in keys make the surrogate
+    exactly reproducible."""
+    Y = three_loops(n_per=16, loops=2, dim=8)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    base = dict(kind="ee", lam=50.0, perplexity=8.0, tol=0.0, sparse=sparse,
+                n_neighbors=24 if sparse else 0, n_negatives=8)
+
+    full = DistributedEmbedding(
+        EmbedConfig(max_iters=12, **base), mesh).fit(Y)
+
+    ckdir = str(tmp_path / "ck")
+    DistributedEmbedding(
+        EmbedConfig(max_iters=6, checkpoint_dir=ckdir,
+                    checkpoint_every=100, **base), mesh).fit(Y)
+    res = DistributedEmbedding(
+        EmbedConfig(max_iters=12, checkpoint_dir=ckdir,
+                    checkpoint_every=100, **base), mesh).fit(Y)
+
+    assert res.resumed_from == 6
+    assert res.n_iters == 6
+    # E at the restored iterate equals the uninterrupted run's E there (the
+    # sparse path re-evaluates it through the grad-enabled program, whose
+    # XLA reduction fusion differs slightly from the line-search fast path)
+    np.testing.assert_allclose(res.energies[0], full.energies[6], rtol=1e-3)
+    # every post-resume iterate replays the uninterrupted trajectory exactly
+    np.testing.assert_array_equal(res.energies[1:], full.energies[7:13])
+    np.testing.assert_array_equal(np.asarray(res.X), np.asarray(full.X))
+
+
+def test_engine_max_seconds_and_traces(problem):
+    """EngineResult trace invariants surface through minimize()."""
+    _, aff, X0 = problem
+    res = minimize(X0, aff, "ee", 50.0, SD(), max_iters=15, tol=0.0)
+    assert len(res.energies) == res.n_iters + 1
+    assert len(res.step_sizes) == res.n_iters
+    assert res.n_fevals[-1] >= res.n_iters
+    assert np.all(np.isfinite(res.energies))

@@ -10,8 +10,8 @@ from repro.core import (SD, energy_and_grad, energy_and_grad_sparse,
 from repro.core.laplacian import laplacian_matmul
 from repro.core.strategies import SparseSD
 from repro.sparse import (NeighborGraph, from_dense, knn_graph, pcg,
-                          sparse_affinities, sym_degree, sym_lap_matvec,
-                          to_dense)
+                          sparse_affinities, sparse_laplacian_eigenmaps,
+                          sym_degree, sym_lap_matvec, to_dense)
 from tests.conftest import three_loops
 
 UNNORM = [("ee", 50.0), ("tee", 10.0), ("epan", 5.0)]
@@ -199,6 +199,42 @@ def test_pcg_solves_spd_system():
     np.testing.assert_allclose(np.asarray(res.x),
                                np.asarray(jnp.linalg.solve(A, B)),
                                rtol=1e-3, atol=1e-4)
+
+
+# -- sparse spectral init -------------------------------------------------------
+
+
+def test_sparse_eigenmaps_matches_dense():
+    """Power-iteration eigenmaps from ELL storage vs the dense eigh on the
+    same symmetrized graph: each embedding column matches the corresponding
+    dense eigenvector up to sign (ROADMAP: sparse spectral init)."""
+    from repro.core import laplacian_eigenmaps
+
+    Y = three_loops(n_per=30, loops=2, dim=8)
+    saff = sparse_affinities(Y, k=12, perplexity=4.0, model="ee")
+    A = to_dense(saff.graph)
+    Xd = np.asarray(laplacian_eigenmaps(0.5 * (A + A.T), 2))
+    Xs = np.asarray(sparse_laplacian_eigenmaps(saff.graph, saff.rev, d=2))
+    for j in range(2):
+        c = abs(np.dot(Xd[:, j], Xs[:, j])
+                / (np.linalg.norm(Xd[:, j]) * np.linalg.norm(Xs[:, j])))
+        assert c > 0.99, (j, c)
+
+
+def test_sparse_init_routes_to_power_iteration_above_cutoff():
+    """Above N = 2048 the trainer's sparse init is the ELL power iteration,
+    not the former random fallback."""
+    from repro.embed.trainer import DistributedEmbedding, EmbedConfig
+
+    n = 2100
+    Y = jax.random.normal(jax.random.PRNGKey(0), (n, 4))
+    saff = sparse_affinities(Y, k=12, perplexity=4.0, model="ee")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    emb = DistributedEmbedding(EmbedConfig(sparse=True, perplexity=4.0,
+                                           n_neighbors=12), mesh)
+    X0 = emb._sparse_init(saff, n)
+    want = sparse_laplacian_eigenmaps(saff.graph, saff.rev, d=2, seed=0) * 0.1
+    np.testing.assert_array_equal(np.asarray(X0), np.asarray(want))
 
 
 # -- trainer integration --------------------------------------------------------
