@@ -1,0 +1,112 @@
+"""CI benchmark-regression gate: diff per-iteration timings against the
+committed baseline.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --bench BENCH_smoke.json --baseline results/fig5.json [--threshold 1.5]
+
+`--bench` is the BENCH_smoke.json written by `benchmarks.run --smoke`
+(its "fig5" section, schema {model: {n: {dense|sparse: {iter_s: ...}}}});
+`--baseline` is the committed results/fig5.json.  Every (model, n, column)
+pair present in BOTH files is compared on `iter_s`; a pair whose new
+timing exceeds threshold x baseline is a REGRESSION and the script exits
+nonzero, printing the full comparison table either way.  Pairs present in
+only one file are listed but never fail the gate (new models/Ns must be
+able to land before their baseline exists).  `sharded` columns (nested
+per device count) are compared per count.
+
+The threshold can also come from the BENCH_REGRESSION_THRESHOLD env var
+(the CLI flag wins), so a one-off noisy runner can be waved through
+without editing the workflow.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _iter_timings(tree: dict):
+    """Yield ((model, n, column), iter_s) for every timed cell, flattening
+    the per-device-count sharded sub-columns."""
+    for model, rows in tree.items():
+        if not isinstance(rows, dict):
+            continue
+        for n, cols in rows.items():
+            if not isinstance(cols, dict):
+                continue
+            for col, cell in cols.items():
+                if not isinstance(cell, dict):
+                    continue
+                if col == "sharded":
+                    for dev, sub in cell.items():
+                        if isinstance(sub, dict) and "iter_s" in sub:
+                            yield (model, str(n), f"sharded@{dev}dev"), \
+                                float(sub["iter_s"])
+                elif "iter_s" in cell:
+                    yield (model, str(n), col), float(cell["iter_s"])
+
+
+def compare(bench: dict, baseline: dict, threshold: float):
+    """Returns (rows, regressions): rows are
+    (key, base_iter_s | None, new_iter_s | None, ratio | None, status)."""
+    new = dict(_iter_timings(bench))
+    base = dict(_iter_timings(baseline))
+    rows, regressions = [], []
+    for key in sorted(set(new) | set(base)):
+        b, v = base.get(key), new.get(key)
+        if b is None or v is None:
+            rows.append((key, b, v, None,
+                         "no-baseline" if b is None else "not-run"))
+            continue
+        ratio = v / max(b, 1e-12)
+        status = "REGRESSION" if ratio > threshold else "ok"
+        rows.append((key, b, v, ratio, status))
+        if status == "REGRESSION":
+            regressions.append((key, b, v, ratio))
+    return rows, regressions
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="BENCH_smoke.json")
+    ap.add_argument("--baseline", default="results/fig5.json")
+    ap.add_argument("--threshold", type=float,
+                    default=float(os.environ.get(
+                        "BENCH_REGRESSION_THRESHOLD", 1.5)))
+    a = ap.parse_args()
+
+    with open(a.bench) as f:
+        bench = json.load(f)
+    with open(a.baseline) as f:
+        baseline = json.load(f)
+    bench5 = bench.get("fig5", bench)
+
+    rows, regressions = compare(bench5, baseline, a.threshold)
+    print(f"bench-regression: threshold {a.threshold:.2f}x "
+          f"({a.bench} vs {a.baseline})")
+    print(f"{'model':8s} {'n':>8s} {'column':>14s} {'base_s':>10s} "
+          f"{'new_s':>10s} {'ratio':>7s}  status")
+    for (model, n, col), b, v, ratio, status in rows:
+        fb = f"{b:.4f}" if b is not None else "-"
+        fv = f"{v:.4f}" if v is not None else "-"
+        fr = f"{ratio:.2f}" if ratio is not None else "-"
+        print(f"{model:8s} {n:>8s} {col:>14s} {fb:>10s} {fv:>10s} "
+              f"{fr:>7s}  {status}")
+
+    compared = [r for r in rows if r[3] is not None]
+    if not compared:
+        print("bench-regression: WARNING — no comparable (model, n, column) "
+              "pairs between bench and baseline; gate is vacuous")
+        return 0
+    if regressions:
+        print(f"bench-regression: FAIL — {len(regressions)} timing(s) "
+              f"regressed more than {a.threshold:.2f}x")
+        return 1
+    print(f"bench-regression: OK — {len(compared)} timing(s) within "
+          f"{a.threshold:.2f}x of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

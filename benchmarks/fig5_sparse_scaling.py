@@ -1,6 +1,9 @@
 """Fig. 5 (beyond-paper): dense vs sparse pipeline scaling in N.
 
-Sweeps N over {2k, 10k, 50k} (container default) and reports, per N:
+Sweeps N over {2k, 10k, 50k} (container default) and, per model in
+`--model` (comma-separated; normalized kinds route through the sampled
+ratio-estimator repulsion, unnormalized through absolute negative
+sampling), reports per N:
 
   * graph/affinity build time (dense perplexity calibration vs k-NN + ELL
     calibration),
@@ -24,7 +27,13 @@ core the emulated devices share the core, so this measures sharding
 OVERHEAD (psum + padding), not speedup; on real hardware the same flag
 wiring gives the scaling curve.
 
-    PYTHONPATH=src python -m benchmarks.fig5_sparse_scaling [--ns 2000,10000,50000]
+The JSON output is keyed {model: {n: columns}} and MERGES into an
+existing `--out` file at the model level, so successive runs (e.g. an ee
+smoke sweep, then `--model tsne --ns 20000`) accumulate columns in one
+results/fig5.json — the file the CI bench-regression job diffs
+per-iteration timings against (benchmarks/check_regression.py).
+
+    PYTHONPATH=src python -m benchmarks.fig5_sparse_scaling [--ns 2000,10000,50000] [--model ee,tsne]
 """
 from __future__ import annotations
 
@@ -39,7 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (SD, LSConfig, energy_and_grad_sparse,
+from repro.core import (SD, LSConfig, energy_and_grad_sparse, is_normalized,
                         make_affinities, minimize)
 from repro.data import mnist_like
 from repro.sparse import (make_sd_operator, make_sharded_energy_grad,
@@ -49,6 +58,14 @@ from repro.sparse import (make_sd_operator, make_sharded_energy_grad,
 from .common import csv_row
 
 Array = jnp.ndarray
+
+# normalized models weight the LOG of the repulsive sum; lam ~ 1 is the
+# t-SNE/s-SNE convention, against lam ~ 100 for the EE family
+_DEFAULT_LAM = {"ssne": 1.0, "tsne": 1.0}
+
+
+def _model_lam(kind: str, lam: float | None) -> float:
+    return _DEFAULT_LAM.get(kind, 100.0) if lam is None else lam
 
 
 def dense_point(Y: Array, kind: str, lam: float, iters: int,
@@ -68,30 +85,36 @@ def dense_point(Y: Array, kind: str, lam: float, iters: int,
 
 
 def _time_sparse_iters(eg, matvec, inv_diag, n: int, iters: int,
-                       t_build: float) -> dict:
+                       t_build: float, normalized: bool = False) -> dict:
     """Shared timing loop for the sparse/sharded columns: the jitted step
     (eg -> warm-started PCG -> fixed small move) and the warmup/steady
     timing must be IDENTICAL for the two columns' energies and iter times
-    to be comparable.  `eg(X, key) -> (E, G)`."""
+    to be comparable.  `eg(X, key) -> (E, G)`; normalized models thread
+    the streaming partition-function estimate, `eg(X, key, z) ->
+    (E, G, z)`."""
 
     @jax.jit
-    def step(X, P, key):
-        E, G = eg(X, key)
+    def step(X, P, z, key):
+        if normalized:
+            E, G, z = eg(X, key, z)
+        else:
+            E, G = eg(X, key)
         P = pcg(matvec, -G, P, inv_diag=inv_diag, tol=1e-3, maxiter=50).x
         # fixed small step for timing purposes (the trainer line-searches)
         xc = X - jnp.mean(X, axis=0, keepdims=True)
         scale = jnp.sqrt(jnp.mean(xc * xc)) + 1e-3
         alpha = jnp.minimum(
             1.0, scale / (jnp.sqrt(jnp.mean(P * P)) + 1e-30))
-        return X + alpha * P, P, E
+        return X + alpha * P, P, z, E
 
     X = 1e-2 * jax.random.normal(jax.random.PRNGKey(0), (n, 2))
     P = jnp.zeros_like(X)
+    z = jnp.zeros((), X.dtype)          # <= 0: uninitialized estimator
     key0 = jax.random.PRNGKey(1)
-    X, P, E = jax.block_until_ready(step(X, P, key0))   # compile + iter 1
+    X, P, z, E = jax.block_until_ready(step(X, P, z, key0))  # compile+iter 1
     t0 = time.perf_counter()
     for it in range(1, iters):
-        X, P, E = step(X, P, jax.random.fold_in(key0, it))
+        X, P, z, E = step(X, P, z, jax.random.fold_in(key0, it))
     jax.block_until_ready(X)
     t_iter = (time.perf_counter() - t0) / max(iters - 1, 1)
     return {"build_s": t_build, "setup_s": 0.0,
@@ -107,10 +130,15 @@ def sparse_point(Y: Array, kind: str, lam: float, iters: int,
 
     matvec, inv_diag, _ = make_sd_operator(saff.graph, saff.rev)
     lam_ = jnp.asarray(lam, jnp.float32)
-    eg = lambda X, key: energy_and_grad_sparse(X, saff, kind, lam_,
-                                               n_negatives=m, key=key)
+    if is_normalized(kind):
+        eg = lambda X, key, z: energy_and_grad_sparse(
+            X, saff, kind, lam_, n_negatives=m, key=key, z_prev=z,
+            return_state=True)
+    else:
+        eg = lambda X, key: energy_and_grad_sparse(X, saff, kind, lam_,
+                                                   n_negatives=m, key=key)
     return _time_sparse_iters(eg, matvec, inv_diag, Y.shape[0], iters,
-                              t_build)
+                              t_build, normalized=is_normalized(kind))
 
 
 def sharded_point(Y: Array, mesh, kind: str, lam: float, iters: int,
@@ -126,9 +154,12 @@ def sharded_point(Y: Array, mesh, kind: str, lam: float, iters: int,
                                        n_negatives=m)
     matvec, inv_diag, _ = make_sharded_sd_operator(mesh, ("data",), sg, saff)
     lam_ = jnp.asarray(lam, jnp.float32)
-    eg = lambda X, key: eg_l(X, lam_, key)
+    if is_normalized(kind):
+        eg = lambda X, key, z: eg_l(X, lam_, key, z)
+    else:
+        eg = lambda X, key: eg_l(X, lam_, key)
     return _time_sparse_iters(eg, matvec, inv_diag, Y.shape[0], iters,
-                              t_build)
+                              t_build, normalized=is_normalized(kind))
 
 
 _WORKER_MARK = "FIG5_WORKER_JSON "
@@ -167,7 +198,7 @@ def _run_sharded_sweep(devices, ns, kind, lam, iters, perplexity, k, m,
             inherited + [f"--xla_force_host_platform_device_count={dev}"])
         argv = [sys.executable, "-m", "benchmarks.fig5_sparse_scaling",
                 "--worker-devices", str(dev),
-                "--ns", ",".join(str(n) for n in ns), "--kind", kind,
+                "--ns", ",".join(str(n) for n in ns), "--model", kind,
                 "--lam", str(lam), "--iters", str(iters), "--k", str(k),
                 "--perplexity", str(perplexity), "--m", str(m),
                 "--dim", str(dim)]
@@ -188,13 +219,9 @@ def _run_sharded_sweep(devices, ns, kind, lam, iters, perplexity, k, m,
     return out
 
 
-def run(ns=(2000, 10_000, 50_000), kind="ee", lam=100.0, iters=10,
-        perplexity=10.0, k=30, m=5, dense_cutoff=5000, dim=64,
-        devices=(), out_json=None):
-    # keep k >= 3 * perplexity: with fewer candidates the entropy target
-    # log(perplexity) is unreachable and the sparse calibration degenerates
-    # to uniform, making the dense/sparse energy columns incomparable
-    assert k >= perplexity, (k, perplexity)
+def _run_one_model(ns, kind, lam, iters, perplexity, k, m, dense_cutoff,
+                   dim, devices) -> dict:
+    lam = _model_lam(kind, lam)
     results = {}
     for n in ns:
         Y, _ = mnist_like(n=n, dim=dim)
@@ -226,11 +253,46 @@ def run(ns=(2000, 10_000, 50_000), kind="ee", lam=100.0, iters=10,
         t0, t1 = results[n0]["sparse"]["iter_s"], results[n1]["sparse"]["iter_s"]
         csv_row("fig5", kind, "sparse-scaling-exponent", f"{n0}->{n1}",
                 f"{np.log(max(t1, 1e-9) / max(t0, 1e-9)) / np.log(n1 / n0):.2f}")
+    return results
+
+
+def run(ns=(2000, 10_000, 50_000), models=("ee",), lam=None, iters=10,
+        perplexity=10.0, k=30, m=5, dense_cutoff=5000, dim=64,
+        devices=(), out_json=None):
+    """Returns {model: {n: columns}}.  `lam=None` picks the per-model
+    default (1 for the normalized kinds, 100 for the EE family).  The JSON
+    output MERGES at the model level into an existing `out_json`."""
+    # keep k >= 3 * perplexity: with fewer candidates the entropy target
+    # log(perplexity) is unreachable and the sparse calibration degenerates
+    # to uniform, making the dense/sparse energy columns incomparable
+    assert k >= perplexity, (k, perplexity)
+    results = {kind: _run_one_model(ns, kind, lam, iters, perplexity, k, m,
+                                    dense_cutoff, dim, devices)
+               for kind in models}
     if out_json:
         if os.path.dirname(out_json):
             os.makedirs(os.path.dirname(out_json), exist_ok=True)
+        merged = {}
+        if os.path.exists(out_json):
+            try:
+                with open(out_json) as f:
+                    merged = json.load(f)
+            except (json.JSONDecodeError, OSError):
+                merged = {}
+            if merged and not any(
+                    isinstance(v, dict) and
+                    any(c in v for c in ("dense", "sparse", "sharded"))
+                    for row in merged.values() if isinstance(row, dict)
+                    for v in row.values()):
+                merged = {}     # pre-model-column schema: start fresh
+        for kind, rows in results.items():
+            # merge at the (model, n) level so e.g. a later
+            # `--model tsne --ns 20000` run extends the smoke sweep's tsne
+            # column instead of replacing it
+            model_rows = merged.setdefault(kind, {})
+            model_rows.update({str(n): row for n, row in rows.items()})
         with open(out_json, "w") as f:
-            json.dump(results, f)
+            json.dump(merged, f)
     return results
 
 
@@ -245,8 +307,12 @@ def _ns_list(s: str) -> tuple[int, ...]:
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--ns", type=_ns_list, default=(2000, 10_000, 50_000))
-    ap.add_argument("--kind", default="ee")
-    ap.add_argument("--lam", type=float, default=100.0)
+    ap.add_argument("--model", default="ee",
+                    help="comma-separated model kinds, e.g. ee,tsne — each "
+                         "gets its own column in the JSON output")
+    ap.add_argument("--lam", type=float, default=None,
+                    help="override the per-model default lambda "
+                         "(100 EE-family, 1 normalized)")
     ap.add_argument("--iters", type=int, default=10)
     ap.add_argument("--k", type=int, default=30)
     ap.add_argument("--perplexity", type=float, default=10.0)
@@ -260,11 +326,13 @@ def main():
                     help=argparse.SUPPRESS)   # internal: sharded-sweep child
     ap.add_argument("--out", default=None)
     a = ap.parse_args()
+    models = tuple(a.model.split(","))
     if a.worker_devices is not None:
-        _sharded_worker(a.worker_devices, a.ns, a.kind, a.lam, a.iters,
+        _sharded_worker(a.worker_devices, a.ns, models[0],
+                        _model_lam(models[0], a.lam), a.iters,
                         a.perplexity, a.k, a.m, a.dim)
         return
-    run(ns=a.ns, kind=a.kind, lam=a.lam, iters=a.iters, k=a.k, m=a.m,
+    run(ns=a.ns, models=models, lam=a.lam, iters=a.iters, k=a.k, m=a.m,
         perplexity=a.perplexity, dense_cutoff=a.dense_cutoff, dim=a.dim,
         devices=a.devices, out_json=a.out)
 

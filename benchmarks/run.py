@@ -8,8 +8,10 @@ Ns so the whole suite finishes on one CPU core; --full uses paper scale.
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
+import time
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
@@ -24,6 +26,10 @@ def main() -> None:
                     help="paper-scale Ns (hours on this container)")
     ap.add_argument("--smoke", action="store_true",
                     help="minimal CI subset (~1 min): tiny fig1 + fig5")
+    ap.add_argument("--bench-out", default="BENCH_smoke.json",
+                    help="where --smoke writes the machine-readable bench "
+                         "summary the CI regression gate compares against "
+                         "the committed results/fig5.json baseline")
     a, _ = ap.parse_known_args()
 
     os.makedirs("results", exist_ok=True)
@@ -31,9 +37,19 @@ def main() -> None:
     if a.smoke:
         fig1_learning_curves.run(n_per=16, loops=3, iters=10,
                                  out_json="results/fig1.json")
-        fig5_sparse_scaling.run(ns=(256, 1024), iters=5, k=10, m=5,
-                                perplexity=3.0, dense_cutoff=512,
-                                out_json="results/fig5.json")
+        # iters=12 -> 11 timed iterations per cell: the bench-regression
+        # gate diffs these against the committed baseline, and 4-iteration
+        # cells are too noise-dominated to gate on
+        res5 = fig5_sparse_scaling.run(ns=(256, 1024), iters=12, k=10, m=5,
+                                       perplexity=3.0, dense_cutoff=512,
+                                       models=("ee", "tsne"),
+                                       out_json="results/fig5.json")
+        import jax
+        with open(a.bench_out, "w") as f:
+            json.dump({"fig5": res5,
+                       "meta": {"jax": jax.__version__,
+                                "devices": len(jax.devices()),
+                                "unix_time": time.time()}}, f)
         return
     if a.full:
         fig1_learning_curves.run(n_per=72, loops=10, iters=400,
@@ -47,6 +63,7 @@ def main() -> None:
                        out_json="results/fig4.json")
         sd_overhead.run(ns=(1000, 5000, 20_000))
         fig5_sparse_scaling.run(ns=(2000, 10_000, 50_000), iters=10,
+                                models=("ee", "tsne"),
                                 out_json="results/fig5.json")
     else:
         fig1_learning_curves.run(n_per=36, loops=6, iters=60,
@@ -62,7 +79,7 @@ def main() -> None:
                        out_json="results/fig4.json")
         sd_overhead.run(ns=(500, 1000))
         fig5_sparse_scaling.run(ns=(1000, 4000), iters=8,
-                                dense_cutoff=2000,
+                                dense_cutoff=2000, models=("ee", "tsne"),
                                 out_json="results/fig5.json")
     # roofline table if a dry-run sweep exists
     if os.path.exists("results/dryrun.jsonl"):

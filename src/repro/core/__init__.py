@@ -14,6 +14,7 @@ from .linesearch import LSConfig
 from .minimize import MinimizeResult, minimize
 from .objectives import (
     NORMALIZED,
+    attractive_edge_terms,
     attractive_weights,
     direct_energy,
     energy,
@@ -22,6 +23,7 @@ from .objectives import (
     grad,
     gradient_weights,
     is_normalized,
+    negative_pair_terms,
 )
 from .spectral_init import laplacian_eigenmaps
 from .strategies import DiagH, FP, GD, SD, SDMinus, SparseSD, make_strategy
@@ -32,9 +34,9 @@ __all__ = [
     "LBFGS", "NonlinearCG",
     "HomotopyResult", "homotopy_path",
     "LSConfig", "MinimizeResult", "minimize",
-    "NORMALIZED", "attractive_weights", "direct_energy", "energy",
-    "energy_and_grad", "energy_and_grad_sparse", "grad", "gradient_weights",
-    "is_normalized",
+    "NORMALIZED", "attractive_edge_terms", "attractive_weights",
+    "direct_energy", "energy", "energy_and_grad", "energy_and_grad_sparse",
+    "grad", "gradient_weights", "is_normalized", "negative_pair_terms",
     "laplacian_eigenmaps",
     "DiagH", "FP", "GD", "SD", "SDMinus", "SparseSD", "make_strategy",
 ]

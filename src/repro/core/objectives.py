@@ -113,28 +113,58 @@ def gradient_weights(X: Array, aff: Affinities, kind: str, lam) -> Array:
     raise ValueError(f"unknown kind {kind!r}")
 
 
+def directed_lap_apply(w: Array, x: Array, xj: Array) -> Array:
+    """Rows of the directed Laplacian product from pre-gathered neighbors:
+    (sum_j w_nj) x_n - sum_j w_nj x_{j(n)}, with w (N, k), x (N, d),
+    xj (N, k, d).  The one spelling of this accumulation shared by every
+    gather-only edge sweep — the sampled-negative halves and t-SNE's
+    K-reweighted attractive halves here, and the per-shard bodies in
+    sparse/sharding.py — so the backends stay numerically identical for
+    multi-device parity."""
+    return (jnp.sum(w, axis=1, keepdims=True) * x
+            - jnp.einsum("nk,nkd->nd", w, xj))
+
+
 def negative_pair_terms(kind: str, t: Array) -> tuple[Array, Array]:
-    """Per-pair repulsive terms (s_pair, b) at squared distances t for the
-    unnormalized models: s_pair sums to the repulsive energy term s, b is
-    the gradient-Laplacian weight of the pair.  Shared by the sampled
-    negatives here and the row-sharded backend (sparse/sharding.py) — the
-    two must stay numerically identical for multi-device parity."""
-    if kind == "ee":
+    """Per-pair repulsive terms (s_pair, b) at squared distances t, for ALL
+    kinds (W- = 1 off-diagonal): s_pair sums to the repulsive term s — for
+    normalized models that sum IS the partition function Z — and b is the
+    gradient-Laplacian weight of the pair.  The normalized kinds share the
+    unnormalized formulas (kernels/ref.py contract): ssne pairs like ee
+    (Gaussian), tsne like tee (Student-t).  Shared by the sampled negatives
+    here and the row-sharded backend (sparse/sharding.py) — the two must
+    stay numerically identical for multi-device parity."""
+    if kind in ("ee", "ssne"):
         s_pair = jnp.exp(-t)
         return s_pair, s_pair
-    if kind == "tee":
+    if kind in ("tee", "tsne"):
         K = 1.0 / (1.0 + t)
         return K, K * K
     if kind == "epan":
         return jnp.maximum(1.0 - t, 0.0), (t < 1.0).astype(t.dtype)
-    raise ValueError(
-        f"negative sampling supports unnormalized kinds only (got "
-        f"{kind!r}); normalized models need a ratio estimator "
-        f"(ROADMAP open item)")
+    raise ValueError(f"unknown kind {kind!r}")
+
+
+def attractive_edge_terms(kind: str, w: Array, t: Array) -> tuple[Array, Array]:
+    """Per-edge attractive terms (e_pair, a) at squared distances t for
+    directed edge weights w: e_pair sums to the attractive energy e_plus,
+    a is the edge's attractive gradient-Laplacian weight.  For every kind
+    but t-SNE the attractive gradient weights equal the data weights
+    themselves (kernels/ref.py contract: a = Wa); t-SNE reweights each edge
+    by the Student-t kernel K = 1/(1+t) — X-dependent, but a pure function
+    of the SYMMETRIC pair distance, which is what keeps the implicit
+    symmetrization (A + A^T)/2 gather-only for it too.  Shared with the
+    row-sharded backend (sparse/sharding.py) for multi-device parity."""
+    if kind not in KINDS:
+        raise ValueError(f"unknown kind {kind!r}")
+    if kind == "tsne":
+        return w * jnp.log1p(t), w / (1.0 + t)
+    return w * t, w
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("kind", "n_negatives", "with_grad"))
+                   static_argnames=("kind", "n_negatives", "with_grad",
+                                    "return_state"))
 def energy_and_grad_sparse(
     X: Array,
     saff,                      # sparse.SparseAffinities
@@ -144,55 +174,76 @@ def energy_and_grad_sparse(
     n_negatives: int | None = 5,
     key: Array | None = None,
     with_grad: bool = True,
-) -> tuple[Array, Array | None]:
-    """O(N (k + m) d) energy/gradient for the unnormalized models.
+    z_prev: Array | None = None,
+    z_decay=0.9,
+    return_state: bool = False,
+) -> tuple[Array, ...]:
+    """O(N (k + m) d) energy/gradient for EVERY model family.
 
     Attractive side: exact, over the calibrated ELL graph (the implicit
-    symmetric W+ = (A + A^T)/2; sparse/linalg.py).  For every unnormalized
-    kind the attractive gradient weights equal W+ itself (kernels/ref.py
-    contract: a = Wa), so grad+ = 4 L(W+) X with no X-dependent reweighting.
+    symmetric W+ = (A + A^T)/2; sparse/linalg.py).  For every kind but
+    t-SNE the attractive gradient weights equal W+ itself (kernels/ref.py
+    contract: a = Wa), so grad+ = 4 L(W+) X with no X-dependent
+    reweighting; t-SNE reweights each edge by K = 1/(1+t), a pure function
+    of the symmetric pair distance, so both symmetrization halves stay
+    local row gathers (the reverse-graph edge recomputes its K from its
+    own distance instead of fetching the forward edge's value).
 
     Repulsive side: W- = 1 off-diagonal, estimated by CYCLIC-SHIFT negative
-    sampling with the unnormalized-model correction: m distinct shifts
-    s_1..s_m are drawn uniformly from {1..N-1} and row n's negatives are
-    {(n + s_j) mod N}.  Marginally every ordered pair (n, p != n) is
-    sampled with probability m/(N-1), so scaling per-pair terms by (N-1)/m
-    gives E[s_hat] = s and E[L(b_hat) X] = L(b) X in ABSOLUTE scale —
-    required because unnormalized models couple lam to s itself, not to
-    the ratio s / E[s] (the paper's lambda-homotopy).  The shift structure
-    makes the transpose of the sampled edge set just the negated shifts,
-    so the symmetric application — which keeps the estimator exactly
-    translation-invariant (columns of G sum to 0) — is pure gathers; no
-    scatter anywhere in the energy/gradient path (XLA CPU scatter is
-    orders of magnitude slower than gather at these sizes).
+    sampling: m distinct shifts s_1..s_m are drawn uniformly from {1..N-1}
+    and row n's negatives are {(n + s_j) mod N}.  Marginally every ordered
+    pair (n, p != n) is sampled with probability m/(N-1), so scaling
+    per-pair terms by (N-1)/m gives E[s_hat] = s and E[L(b_hat) X] =
+    L(b) X in ABSOLUTE scale — required for the unnormalized models, which
+    couple lam to s itself (the paper's lambda-homotopy).  The shift
+    structure makes the transpose of the sampled edge set just the negated
+    shifts, so the symmetric application — which keeps the estimator
+    exactly translation-invariant (columns of G sum to 0) — is pure
+    gathers; no scatter anywhere in the energy/gradient path (XLA CPU
+    scatter is orders of magnitude slower than gather at these sizes).
+
+    Normalized models (ssne/tsne) reuse the same draw as a RATIO ESTIMATOR
+    for the partition function: s_hat is an unbiased estimate of the
+    global Z = sum_{n != m} K(t_nm), the energy uses the instantaneous
+    log(s_hat) (so line-search trials at the same key descend a consistent
+    surrogate), and the gradient's 1/Z factor uses a STREAMING estimate
+
+        z = z_decay * z_prev + (1 - z_decay) * s_hat     (z_prev > 0)
+
+    to cut the estimator's variance — pass the previous iteration's z via
+    `z_prev` (None or a non-positive value means uninitialized: z = s_hat)
+    and request the updated value with `return_state=True`, which appends
+    z to the returned tuple.  The ratio L(b_hat)X / z is consistent with
+    O(1/m) bias, the standard normalized-repulsion tradeoff
+    (Barnes-Hut-SNE approximates the same ratio with tree sums).
 
     `n_negatives=None` (or >= N-1) uses ALL N-1 shifts, enumerating every
     ordered pair exactly once — the deterministic exact mode the
-    dense-parity tests rely on.
-
-    Normalized models (ssne/tsne) need a ratio estimator for lam/s and are
-    deliberately not supported here (ROADMAP open item).
+    dense-parity tests rely on.  Exhaustive mode bypasses the EMA
+    (z = s_hat = Z exactly: there is no variance left to smooth), so the
+    normalized gradient matches the dense path at k = N-1.
     """
     from repro.sparse.linalg import sym_lap_matvec
 
-    if is_normalized(kind):
+    normalized = is_normalized(kind)
+    if return_state and not normalized:
         raise ValueError(
-            f"energy_and_grad_sparse supports unnormalized kinds only "
-            f"(got {kind!r}); normalized models need a ratio estimator")
+            f"return_state threads the partition-function estimate, which "
+            f"only normalized kinds carry (got {kind!r})")
     g = saff.graph
     rev = getattr(saff, "rev", None)
     n = X.shape[0]
 
-    # attractive: exact over the ELL edges.  sum_nm W+_nm t_nm equals the
-    # directed sum (t is symmetric), so no transpose pass is needed for E.
+    # attractive: exact over the ELL edges.  sum_nm W+_nm f(t_nm) equals
+    # the directed sum (f and t are symmetric), so no transpose pass is
+    # needed for E.
     t_att = jnp.sum((X[:, None, :] - X[g.indices]) ** 2, axis=-1)  # (N, k)
-    e_plus = jnp.sum(g.weights * t_att)
-    # with_grad=False is the line-search fast path: the energy needs only
-    # e_plus and s_hat, none of the Laplacian products
-    la_x = sym_lap_matvec(g, X, rev=rev) if with_grad else None
+    e_pair, aw = attractive_edge_terms(kind, g.weights, t_att)
+    e_plus = jnp.sum(e_pair)
 
     # repulsive: cyclic-shift negatives (all N-1 shifts when exhaustive)
-    if n_negatives is None or n_negatives >= n - 1:
+    exhaustive = n_negatives is None or n_negatives >= n - 1
+    if exhaustive:
         shifts = jnp.arange(1, n, dtype=jnp.int32)
         scale = 1.0
     else:
@@ -206,25 +257,48 @@ def energy_and_grad_sparse(
 
     t_neg = jnp.sum((X[:, None, :] - X[J]) ** 2, axis=-1)      # (N, m)
     s_pair, b = negative_pair_terms(kind, t_neg)
-
     s_hat = scale * jnp.sum(s_pair)
-    E = e_plus + lam * s_hat
+
+    if normalized:
+        E = e_plus + lam * jnp.log(s_hat)
+        if exhaustive or z_prev is None:
+            z = s_hat
+        else:
+            z = jnp.where(z_prev > 0,
+                          z_decay * z_prev + (1.0 - z_decay) * s_hat, s_hat)
+    else:
+        E = e_plus + lam * s_hat
+        z = None
     if not with_grad:
-        return E, None
+        # line-search fast path: the energy needs only e_plus and s_hat,
+        # none of the Laplacian products
+        return (E, None, z) if return_state else (E, None)
+
+    if kind == "tsne":
+        # X-dependent attractive weights: both symmetrization halves as
+        # K-reweighted local gathers ((A o K)^T = A^T o K, K symmetric)
+        if rev is None:
+            raise ValueError(
+                "sparse tsne needs the precomputed reverse graph (saff.rev) "
+                "to keep the K-reweighted transpose half gather-only")
+        t_ratt = jnp.sum((X[:, None, :] - X[rev.indices]) ** 2, axis=-1)
+        arw = attractive_edge_terms(kind, rev.weights, t_ratt)[1]
+        la_x = 0.5 * (directed_lap_apply(aw, X, X[g.indices])
+                      + directed_lap_apply(arw, X, X[rev.indices]))
+    else:
+        la_x = sym_lap_matvec(g, X, rev=rev)
 
     # symmetric Laplacian product over the sampled edges, gather-only:
     # forward slot j is shift +s_j with weights b[:, j]; the transpose is
     # shift -s_j carrying the SAME per-edge weight, read at the source row.
     Jr = (rows - shifts[None, :]) % n                          # (N, m)
     b_rev = b[Jr, jnp.arange(shifts.shape[0])[None, :]]        # (N, m)
-    fwd = (jnp.sum(b, axis=1, keepdims=True) * X
-           - jnp.einsum("nm,nmd->nd", b, X[J]))
-    bwd = (jnp.sum(b_rev, axis=1, keepdims=True) * X
-           - jnp.einsum("nm,nmd->nd", b_rev, X[Jr]))
-    lb_x = 0.5 * scale * (fwd + bwd)
+    lb_x = 0.5 * scale * (directed_lap_apply(b, X, X[J])
+                          + directed_lap_apply(b_rev, X, X[Jr]))
 
-    G = 4.0 * (la_x - lam * lb_x)
-    return E, G
+    lam_rep = (lam / z) if normalized else lam
+    G = 4.0 * (la_x - lam_rep * lb_x)
+    return (E, G, z) if return_state else (E, G)
 
 
 def attractive_weights(aff: Affinities, kind: str) -> Array:

@@ -35,6 +35,13 @@ and may additionally provide
                             its bit-identical results) through the refactor
     place(X)                device placement for X-like arrays (e.g.
                             replicate on a mesh); used on checkpoint restore
+    carry_state()           objective-side state to checkpoint (a pytree,
+                            e.g. the sparse normalized models' streaming
+                            partition-function estimate); saved with every
+                            checkpoint and re-installed on resume via
+    restore_carry(tree)     AFTER the engine's initial energy/grad call, so
+                            the first post-resume iteration sees exactly
+                            the state the uninterrupted run would have
 
 Current backends: dense single-device (core/minimize.py), dense 2-D-sharded
 block-Jacobi and sparse single-device (embed/trainer.py), row-sharded
@@ -166,17 +173,21 @@ def fit_loop(
     alpha_dev = jnp.asarray(1.0, dtype=X0.dtype)
     alpha_host = 1.0
 
+    carry = getattr(objective, "carry_state", None)
+
     ckpt = (Checkpointer(cfg.checkpoint_dir) if cfg.checkpoint_dir else None)
     start_it, resumed_from = 0, None
     ema = None
+    obj_carry = None
     if ckpt is not None:
         latest = ckpt.latest_step()
         if latest is not None:
+            template = {"X": X, "alpha": np.zeros(()), "ema": np.zeros(()),
+                        "state": state}
+            if carry is not None:
+                template["obj"] = carry()
             try:
-                payload = ckpt.restore(latest, {
-                    "X": X, "alpha": np.zeros(()), "ema": np.zeros(()),
-                    "state": state,
-                })
+                payload = ckpt.restore(latest, template)
             except ValueError:
                 # pre-engine checkpoints stored a bare X: resume from it
                 # with fresh line-search/solver state
@@ -188,11 +199,17 @@ def fit_loop(
             ema = (float(payload["ema"])
                    if payload["ema"] is not None else None)
             state = payload["state"]
+            obj_carry = payload.get("obj")
             start_it, resumed_from = latest, latest
 
     key0 = jax.random.PRNGKey(cfg.seed + 1) if stochastic else None
     key = jax.random.fold_in(key0, start_it) if stochastic else None
     E, G = jax.block_until_ready(objective.energy_and_grad(X, key))
+    if obj_carry is not None:
+        # re-install the checkpointed objective state AFTER the initial
+        # energy/grad call (which may have advanced it), so iteration
+        # start_it + 1 sees exactly what the uninterrupted run saw
+        objective.restore_carry(obj_carry)
 
     energies = [float(E)]
     gnorms = [float(jnp.linalg.norm(G))]
@@ -204,12 +221,15 @@ def fit_loop(
 
     def save(step):
         if ckpt is not None:
-            ckpt.save(step, {
+            payload = {
                 "X": X,
                 "alpha": np.asarray(alpha_host, np.float64),
                 "ema": np.asarray(ema, np.float64),
                 "state": state,
-            })
+            }
+            if carry is not None:
+                payload["obj"] = carry()
+            ckpt.save(step, payload)
 
     converged = False
     t_loop = time.perf_counter()

@@ -11,7 +11,10 @@ module contributes the mesh-aware `Objective` backends:
   * sparse single-device: `EmbedConfig(sparse=True)` switches to the
     O(N (k + m) d) neighbor-graph pipeline (docs/sparse.md) — k-NN
     affinities in ELL storage, negative-sampled repulsion, matrix-free
-    Jacobi-CG spectral direction; no (N, N) array anywhere.
+    Jacobi-CG spectral direction; no (N, N) array anywhere.  Normalized
+    models (ssne/tsne) run through the sampled ratio estimator for the
+    partition function, with a streaming (EMA) Z estimate threaded through
+    the objective and checkpointed so resumed runs stay bit-identical.
   * sparse row-sharded: the same pipeline on a multi-device mesh, with the
     ELL graph + reverse graph row-sharded (sparse/sharding.py).  Mesh
     shapes the sparse path can't use (a >1-sized column axis) are rejected
@@ -72,6 +75,10 @@ class EmbedConfig:
                                  # entropy can't reach log(perplexity) and the
                                  # calibration would degenerate to uniform.
     n_negatives: int = 5         # uniform negative samples per point
+    z_ema_decay: float = 0.9     # streaming partition-function EMA for the
+                                 # normalized kinds' sparse ratio estimator
+                                 # (0 disables smoothing; ignored when the
+                                 # negatives are exhaustive)
     knn_method: str = "auto"     # 'exact' | 'approx' | 'auto'
     cg_tol: float = 1e-3
     cg_maxiter: int = 100
@@ -153,6 +160,32 @@ class _SparseObjective:
         return self._place(X) if self._place is not None else X
 
 
+class _NormalizedSparseObjective(_SparseObjective):
+    """Sparse backend for the normalized models (ssne/tsne): threads the
+    streaming partition-function estimate z through the ratio-estimator
+    closures — `eg(X, key, z) -> (E, G, z_new)` — and exposes it to the
+    engine's checkpoint payload (carry_state/restore_carry) so a resumed
+    run replays the uninterrupted gradient trajectory bit-for-bit.  The
+    energy itself uses the instantaneous estimate (no state), so the
+    line-search fast path `e_only(X, key)` is unchanged in shape."""
+
+    def __init__(self, eg, e_only, solve, X0, place=None):
+        super().__init__(eg, e_only, solve, X0, place=place)
+        # z <= 0 means uninitialized: the first application uses its own
+        # instantaneous estimate (see energy_and_grad_sparse)
+        self._z = jnp.zeros((), X0.dtype)
+
+    def energy_and_grad(self, X, key):
+        E, G, self._z = self._eg(X, key, self._z)
+        return E, G
+
+    def carry_state(self):
+        return np.asarray(self._z)
+
+    def restore_carry(self, z):
+        self._z = jnp.asarray(z)
+
+
 class DistributedEmbedding:
     """Spectral-direction embedding on a device mesh."""
 
@@ -222,13 +255,7 @@ class DistributedEmbedding:
         repulsion, matrix-free Jacobi-CG spectral direction.  On a
         multi-device mesh the graph is row-sharded (sparse/sharding.py)."""
         cfg = self.cfg
-        if is_normalized(cfg.kind):
-            # fail fast — energy_and_grad_sparse would only raise after the
-            # whole k-NN search + calibration + reverse-graph build
-            raise ValueError(
-                f"sparse=True supports unnormalized kinds only (got "
-                f"{cfg.kind!r}); normalized models need a ratio estimator "
-                f"(ROADMAP open item)")
+        normalized = is_normalized(cfg.kind)
         n = Y.shape[0]
         k = cfg.n_neighbors or min(int(3 * cfg.perplexity), n - 1)
         if k < cfg.perplexity:
@@ -251,22 +278,36 @@ class DistributedEmbedding:
             sg = shard_sparse_affinities(self.mesh, self.spec.row_axes, saff)
             eg_l, e_l = make_sharded_energy_grad(
                 self.mesh, self.spec.row_axes, sg, cfg.kind,
-                n_negatives=cfg.n_negatives)
-            eg = lambda X, key: eg_l(X, lam, key)
+                n_negatives=cfg.n_negatives, z_decay=cfg.z_ema_decay)
+            if normalized:
+                eg = lambda X, key, z: eg_l(X, lam, key, z)
+            else:
+                eg = lambda X, key: eg_l(X, lam, key)
             e_only = lambda X, key: e_l(X, lam, key)
             matvec, inv_diag, _ = make_sharded_sd_operator(
                 self.mesh, self.spec.row_axes, sg, saff, cfg.mu_scale)
             place = lambda X: replicate(self.mesh, X)
             X = place(X)
         else:
+            # SparseSD's Laplacian system is model-independent (the paper
+            # freezes the attractive Hessian at X = 0, where every kernel's
+            # -K'(0) = 1), so normalized kinds reuse the same CG operator
             matvec, inv_diag, _ = make_sd_operator(saff.graph, saff.rev,
                                                    cfg.mu_scale)
 
-            @jax.jit
-            def eg(X, key):
-                return energy_and_grad_sparse(
-                    X, saff, cfg.kind, lam,
-                    n_negatives=cfg.n_negatives, key=key)
+            if normalized:
+                @jax.jit
+                def eg(X, key, z):
+                    return energy_and_grad_sparse(
+                        X, saff, cfg.kind, lam,
+                        n_negatives=cfg.n_negatives, key=key, z_prev=z,
+                        z_decay=cfg.z_ema_decay, return_state=True)
+            else:
+                @jax.jit
+                def eg(X, key):
+                    return energy_and_grad_sparse(
+                        X, saff, cfg.kind, lam,
+                        n_negatives=cfg.n_negatives, key=key)
 
             @jax.jit
             def e_only(X, key):
@@ -282,5 +323,7 @@ class DistributedEmbedding:
             return pcg(matvec, -G, P0, inv_diag=inv_diag,
                        tol=cfg.cg_tol, maxiter=cfg.cg_maxiter).x
 
-        obj = _SparseObjective(eg, e_only, solve, X, place=place)
+        obj_cls = _NormalizedSparseObjective if normalized \
+            else _SparseObjective
+        obj = obj_cls(eg, e_only, solve, X, place=place)
         return _to_fit_result(fit_loop(obj, X, self._loop_cfg(), callback))

@@ -1,7 +1,11 @@
 # Sparse neighbor-graph subsystem: O(N*k) attractive side for large-N
 # embeddings.  ELL (padded neighbor-list) storage, sparse Laplacian
 # operators + preconditioned CG, and perplexity calibration over k
-# candidates.  See docs/sparse.md for the design.
+# candidates.  Covers EVERY model family in the paper: unnormalized kinds
+# (ee/tee/epan) via absolutely-unbiased cyclic-shift negatives, normalized
+# kinds (ssne/tsne) via the sampled ratio estimator for the partition
+# function (core.objectives.energy_and_grad_sparse).  See docs/sparse.md
+# for the design.
 from .graph import (
     NeighborGraph,
     SparseAffinities,

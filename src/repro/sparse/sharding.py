@@ -27,6 +27,13 @@ Rows are padded to a multiple of the row-group count; padded rows carry
 zero weights (exact-zero contribution, the ELL padding invariant) and are
 masked out of the negative-sampling terms.
 
+Normalized models (ssne/tsne) run through the same machinery with the
+ratio-estimator repulsion (core.objectives.energy_and_grad_sparse): each
+shard's partial partition-function estimate rides the SAME psum as the
+attractive energy (one collective, two scalars), and the streaming-Z EMA
+update is computed replicated from the psum'd total, so every shard holds
+the identical z and the gradient's λ/Z factor needs no extra traffic.
+
 The mesh may have extra (column) axes only at size 1: the ELL arrays are
 one-dimensional in the row direction, so there is nothing to shard a >1
 column axis over — `validate_sparse_mesh` rejects such shapes with a
@@ -41,7 +48,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.objectives import negative_pair_terms
+from repro.core.objectives import (attractive_edge_terms, directed_lap_apply,
+                                   is_normalized, negative_pair_terms)
 from repro.launch.mesh import linear_row_index, shard_map
 
 from .graph import SparseAffinities, reverse_graph
@@ -116,25 +124,41 @@ def shard_sparse_affinities(mesh: Mesh, row_axes: tuple[str, ...],
 
 def _directed_lap_local(xi, Xp, idx, w):
     """Local rows of L(A) X: row gather from the replicated X — the
-    per-shard, scatter-free form of kernels.ref.ell_lap_matvec_ref."""
-    return (jnp.sum(w, axis=-1, keepdims=True) * xi
-            - jnp.einsum("nk,nkd->nd", w, Xp[idx]))
+    per-shard, scatter-free form of kernels.ref.ell_lap_matvec_ref,
+    accumulated through the shared core.objectives.directed_lap_apply so
+    the sharded and single-device backends stay numerically identical."""
+    return directed_lap_apply(w, xi, Xp[idx])
 
 
 def make_sharded_energy_grad(mesh: Mesh, row_axes: tuple[str, ...],
                              sg: ShardedSparseGraph, kind: str,
-                             n_negatives: int | None = 5):
-    """Returns jitted `eg(X, lam, key) -> (E, G)` and
-    `e_only(X, lam, key) -> E` (the line-search fast path), both numerically
-    matching the single-device `energy_and_grad_sparse` on the same graph
-    and PRNG key (same shift draw, same per-pair math; only partial-sum
-    order differs)."""
+                             n_negatives: int | None = 5,
+                             z_decay: float = 0.9):
+    """Jitted sharded energy/gradient closures for EVERY model family.
+
+    Unnormalized kinds (ee/tee/epan): `eg(X, lam, key) -> (E, G)` and
+    `e_only(X, lam, key) -> E` (the line-search fast path).
+
+    Normalized kinds (ssne/tsne): `eg(X, lam, key, z_prev) -> (E, G, z)`
+    threads the streaming partition-function estimate (the ratio estimator
+    of core.objectives.energy_and_grad_sparse): each shard's partial Z is
+    psum'd ONCE per application together with the attractive energy — one
+    extra scalar riding the collective the unnormalized path already pays
+    — and the EMA update runs replicated on the psum'd total, so every
+    shard carries the identical z.  `e_only(X, lam, key) -> E` uses the
+    instantaneous log(s_hat) and needs no state.
+
+    Both closures numerically match the single-device
+    `energy_and_grad_sparse` on the same graph, PRNG key and z_prev (same
+    shift draw, same per-pair math; only partial-sum order differs).
+    """
     negative_pair_terms(kind, jnp.zeros(()))  # reject bad kinds at build
+    normalized = is_normalized(kind)
     n, n_pad = sg.n, sg.n_pad
     all_axes = tuple(mesh.axis_names)
     exhaustive = n_negatives is None or n_negatives >= n - 1
 
-    def body(with_grad, Xp, shifts, lam, scale, idx, w, ridx, rw):
+    def body(with_grad, Xp, shifts, lam, scale, z_prev, idx, w, ridx, rw):
         nb = idx.shape[0]
         row0 = linear_row_index(row_axes) * nb
         xi = jax.lax.dynamic_slice_in_dim(Xp, row0, nb, 0)
@@ -142,10 +166,13 @@ def make_sharded_energy_grad(mesh: Mesh, row_axes: tuple[str, ...],
         live = (rows_g < n).astype(Xp.dtype)[:, None]          # (nb, 1)
 
         # attractive: exact over the local ELL rows (t is symmetric, so the
-        # directed sum needs no transpose pass for the energy)
+        # directed sum needs no transpose pass for the energy); padded rows
+        # have zero weights, so e_pair and aw vanish there
         xj = Xp[idx]                                           # (nb, k, d)
         diff = xi[:, None, :] - xj
-        e_plus = jnp.sum(w * jnp.sum(diff * diff, axis=-1))
+        t_att = jnp.sum(diff * diff, axis=-1)
+        e_pair, aw = attractive_edge_terms(kind, w, t_att)
+        e_plus = jnp.sum(e_pair)
 
         # repulsive: cyclic-shift negatives at the global row ids
         J = (rows_g[:, None] + shifts[None, :]) % n            # (nb, m)
@@ -153,15 +180,38 @@ def make_sharded_energy_grad(mesh: Mesh, row_axes: tuple[str, ...],
         s_pair, b = negative_pair_terms(kind, t_neg)
         s_hat = scale * jnp.sum(live * s_pair)
 
-        E = (jax.lax.psum(e_plus, all_axes)
-             + lam * jax.lax.psum(s_hat, all_axes))
+        # per-shard partials psum'd ONCE: e_plus and s_hat (the partial Z
+        # for normalized kinds) share the collective
+        tot = jax.lax.psum(jnp.stack([e_plus, s_hat]), all_axes)
+        e_plus_g, s_hat_g = tot[0], tot[1]
+        if normalized:
+            E = e_plus_g + lam * jnp.log(s_hat_g)
+            if exhaustive:
+                z = s_hat_g             # exact Z: nothing left to smooth
+            else:
+                z = jnp.where(z_prev > 0,
+                              z_decay * z_prev + (1.0 - z_decay) * s_hat_g,
+                              s_hat_g)
+        else:
+            E = e_plus_g + lam * s_hat_g
+            z = None
         if not with_grad:
             return E
 
         # both symmetrization halves as local gathers: A via the local
-        # graph rows, A^T via the local reverse-graph rows
-        la_x = 0.5 * (_directed_lap_local(xi, Xp, idx, w)
-                      + _directed_lap_local(xi, Xp, ridx, rw))
+        # graph rows, A^T via the local reverse-graph rows.  For t-SNE the
+        # X-dependent edge weight K = 1/(1+t) is a pure function of the
+        # symmetric distance, so each half recomputes it from its own
+        # local distances (same recipe as b_rev below).
+        if kind == "tsne":
+            arw = attractive_edge_terms(
+                kind, rw,
+                jnp.sum((xi[:, None, :] - Xp[ridx]) ** 2, axis=-1))[1]
+            la_x = 0.5 * (_directed_lap_local(xi, Xp, idx, aw)
+                          + _directed_lap_local(xi, Xp, ridx, arw))
+        else:
+            la_x = 0.5 * (_directed_lap_local(xi, Xp, idx, w)
+                          + _directed_lap_local(xi, Xp, ridx, rw))
 
         # reverse negative half: the transpose of shift +s_j is shift -s_j
         # at the SAME per-edge weight, which is a pure function of the
@@ -171,26 +221,26 @@ def make_sharded_energy_grad(mesh: Mesh, row_axes: tuple[str, ...],
         Jr = (rows_g[:, None] - shifts[None, :]) % n
         t_rev = jnp.sum((xi[:, None, :] - Xp[Jr]) ** 2, axis=-1)
         b_rev = live * negative_pair_terms(kind, t_rev)[1]
-        fwd = (jnp.sum(b, axis=1, keepdims=True) * xi
-               - jnp.einsum("nm,nmd->nd", b, Xp[J]))
-        bwd = (jnp.sum(b_rev, axis=1, keepdims=True) * xi
-               - jnp.einsum("nm,nmd->nd", b_rev, Xp[Jr]))
-        lb_x = 0.5 * scale * (fwd + bwd)
+        lb_x = 0.5 * scale * (directed_lap_apply(b, xi, Xp[J])
+                              + directed_lap_apply(b_rev, xi, Xp[Jr]))
 
-        G_loc = 4.0 * (la_x - lam * lb_x)
+        lam_rep = (lam / z) if normalized else lam
+        G_loc = 4.0 * (la_x - lam_rep * lb_x)
         G = jnp.zeros_like(Xp)
         G = jax.lax.dynamic_update_slice_in_dim(G, G_loc, row0, 0)
-        return E, jax.lax.psum(G, all_axes)                    # O(N d) comm
+        G = jax.lax.psum(G, all_axes)                          # O(N d) comm
+        return (E, G, z) if normalized else (E, G)
 
     ell_specs = (P(row_axes, None),) * 4
+    scalar_specs = (P(), P(), P(), P(), P())
     smap_eg = shard_map(
         functools.partial(body, True), mesh=mesh,
-        in_specs=(P(), P(), P(), P()) + ell_specs,
-        out_specs=(P(), P()),
+        in_specs=scalar_specs + ell_specs,
+        out_specs=(P(), P(), P()) if normalized else (P(), P()),
     )
     smap_e = shard_map(
         functools.partial(body, False), mesh=mesh,
-        in_specs=(P(), P(), P(), P()) + ell_specs,
+        in_specs=scalar_specs + ell_specs,
         out_specs=P(),
     )
 
@@ -207,16 +257,26 @@ def make_sharded_energy_grad(mesh: Mesh, row_axes: tuple[str, ...],
         Xp = jnp.pad(X, ((0, n_pad - n), (0, 0)))
         return Xp, shifts, jnp.asarray(lam, X.dtype), scale
 
-    @jax.jit
-    def eg(X, lam, key):
-        E, Gp = smap_eg(*_prep(X, lam, key), sg.indices, sg.weights,
-                        sg.rev_indices, sg.rev_weights)
-        return E, Gp[:n]
+    ell_args = lambda: (sg.indices, sg.weights, sg.rev_indices,
+                        sg.rev_weights)
+
+    if normalized:
+        @jax.jit
+        def eg(X, lam, key, z_prev):
+            E, Gp, z = smap_eg(*_prep(X, lam, key),
+                               jnp.asarray(z_prev, X.dtype), *ell_args())
+            return E, Gp[:n], z
+    else:
+        @jax.jit
+        def eg(X, lam, key):
+            E, Gp = smap_eg(*_prep(X, lam, key), jnp.zeros((), X.dtype),
+                            *ell_args())
+            return E, Gp[:n]
 
     @jax.jit
     def e_only(X, lam, key):
-        return smap_e(*_prep(X, lam, key), sg.indices, sg.weights,
-                      sg.rev_indices, sg.rev_weights)
+        return smap_e(*_prep(X, lam, key), jnp.zeros((), X.dtype),
+                      *ell_args())
 
     return eg, e_only
 

@@ -70,16 +70,22 @@ def test_minimize_bit_identical_to_seed_driver(problem, strategy, ls_cfg):
     assert converged == res.converged
 
 
-@pytest.mark.parametrize("sparse", [False, True],
-                         ids=["dense-mesh", "sparse"])
-def test_resume_replays_uninterrupted_trace(tmp_path, sparse):
+@pytest.mark.parametrize("sparse,kind,lam", [
+    (False, "ee", 50.0),
+    (True, "ee", 50.0),
+    # normalized kind: the checkpoint payload additionally carries the
+    # ratio estimator's streaming partition-function state (carry_state/
+    # restore_carry), without which the post-resume gradients diverge
+    (True, "tsne", 1.0),
+], ids=["dense-mesh", "sparse", "sparse-normalized"])
+def test_resume_replays_uninterrupted_trace(tmp_path, sparse, kind, lam):
     """Interrupted-vs-uninterrupted runs produce IDENTICAL energy traces:
-    the checkpoint payload carries the line-search and solver state, and
-    (on the sparse path) the per-iteration fold_in keys make the surrogate
-    exactly reproducible."""
+    the checkpoint payload carries the line-search and solver state (plus
+    objective carry state where it exists), and (on the sparse path) the
+    per-iteration fold_in keys make the surrogate exactly reproducible."""
     Y = three_loops(n_per=16, loops=2, dim=8)
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    base = dict(kind="ee", lam=50.0, perplexity=8.0, tol=0.0, sparse=sparse,
+    base = dict(kind=kind, lam=lam, perplexity=8.0, tol=0.0, sparse=sparse,
                 n_neighbors=24 if sparse else 0, n_negatives=8)
 
     full = DistributedEmbedding(

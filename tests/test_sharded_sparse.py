@@ -52,6 +52,37 @@ _SUBPROCESS_PROG = textwrap.dedent("""
             relEo = abs(float(E1 - e_only(X, lam, key))) / abs(float(E1))
             assert relEo < 1e-5, (kind, m, relEo)
 
+    # -- normalized kinds: ratio-estimator parity incl. the streaming Z ----
+    for kind, lam in [("ssne", 5.0), ("tsne", 2.0)]:
+        saff = sparse_affinities(Y, k=10, perplexity=3.0, model=kind)
+        sg = shard_sparse_affinities(mesh, ("data",), saff)
+        for m in (5, None):
+            eg, e_only = make_sharded_energy_grad(mesh, ("data",), sg, kind,
+                                                  n_negatives=m)
+            key = jax.random.PRNGKey(7)
+            E1, G1, z1 = energy_and_grad_sparse(
+                X, saff, kind, lam, n_negatives=m, key=key,
+                return_state=True)
+            E8, G8, z8 = eg(X, lam, key, jnp.zeros(()))
+            relE = abs(float(E1 - E8)) / abs(float(E1))
+            relG = float(jnp.linalg.norm(G1 - G8) / jnp.linalg.norm(G1))
+            relZ = abs(float(z1 - z8)) / abs(float(z1))
+            assert relE < 1e-5 and relG < 1e-5 and relZ < 1e-5, \
+                (kind, m, relE, relG, relZ)
+            relEo = abs(float(E1 - e_only(X, lam, key))) / abs(float(E1))
+            assert relEo < 1e-5, (kind, m, relEo)
+            # warm streaming state, fresh key: the EMA'd lam/Z gradient
+            # stays in lockstep across device counts
+            key2 = jax.random.PRNGKey(8)
+            E1b, G1b, z1b = energy_and_grad_sparse(
+                X, saff, kind, lam, n_negatives=m, key=key2,
+                z_prev=z1, return_state=True)
+            E8b, G8b, z8b = eg(X, lam, key2, z8)
+            relGb = float(jnp.linalg.norm(G1b - G8b)
+                          / jnp.linalg.norm(G1b))
+            relZb = abs(float(z1b - z8b)) / abs(float(z1b))
+            assert relGb < 1e-5 and relZb < 1e-5, (kind, m, relGb, relZb)
+
     # -- SD operator parity ------------------------------------------------
     saff = sparse_affinities(Y, k=10, perplexity=3.0, model="ee")
     sg = shard_sparse_affinities(mesh, ("data",), saff)
@@ -103,6 +134,14 @@ _SUBPROCESS_PROG = textwrap.dedent("""
     assert r8.X.shape == (Y2.shape[0], 2)
     # identical seeds: trajectories agree up to accumulated fp noise
     np.testing.assert_allclose(r8.energies, r1.energies, rtol=5e-3)
+
+    # -- acceptance: normalized-model trainer parity, 8 devices vs 1 -------
+    cfg_t = EmbedConfig(kind="tsne", lam=1.0, perplexity=8.0, max_iters=8,
+                        sparse=True, n_neighbors=24, n_negatives=8, tol=0.0)
+    rt1 = DistributedEmbedding(cfg_t, mesh1).fit(Y2)
+    rt8 = DistributedEmbedding(cfg_t, mesh).fit(Y2)
+    assert rt8.energies[-1] < rt8.energies[0]
+    np.testing.assert_allclose(rt8.energies, rt1.energies, rtol=5e-3)
 
     # -- mesh shapes the sparse path can't use are rejected ----------------
     mesh24 = jax.make_mesh((2, 4), ("data", "model"), **axis_types_kwargs(2))
@@ -174,10 +213,23 @@ def test_validate_sparse_mesh_messages():
         validate_sparse_mesh(mesh, ("nope",))
 
 
-def test_normalized_kind_rejected_at_build():
+def test_normalized_sharded_single_device_parity():
+    """Normalized kinds build and match energy_and_grad_sparse on a (1, 1)
+    mesh, including the threaded partition-function estimate (the former
+    build-time rejection is lifted)."""
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    Y, _ = _problem(n=12)
-    saff = sparse_affinities(Y, k=5, perplexity=3.0, model="ee")
+    Y, X = _problem()
+    saff = sparse_affinities(Y, k=10, perplexity=3.0, model="tsne")
     sg = shard_sparse_affinities(mesh, ("data",), saff)
-    with pytest.raises(ValueError, match="unnormalized"):
-        make_sharded_energy_grad(mesh, ("data",), sg, "ssne")
+    eg, e_only = make_sharded_energy_grad(mesh, ("data",), sg, "tsne",
+                                          n_negatives=6)
+    key = jax.random.PRNGKey(2)
+    E1, G1, z1 = energy_and_grad_sparse(X, saff, "tsne", 2.0, n_negatives=6,
+                                        key=key, return_state=True)
+    E2, G2, z2 = eg(X, 2.0, key, jnp.zeros(()))
+    np.testing.assert_allclose(float(E1), float(E2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(G1), np.asarray(G2),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(z1), float(z2), rtol=1e-6)
+    np.testing.assert_allclose(float(e_only(X, 2.0, key)), float(E1),
+                               rtol=1e-6)

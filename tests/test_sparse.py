@@ -9,12 +9,15 @@ from repro.core import (SD, energy_and_grad, energy_and_grad_sparse,
                         make_affinities, make_strategy)
 from repro.core.laplacian import laplacian_matmul
 from repro.core.strategies import SparseSD
-from repro.sparse import (NeighborGraph, from_dense, knn_graph, pcg,
-                          sparse_affinities, sparse_laplacian_eigenmaps,
-                          sym_degree, sym_lap_matvec, to_dense)
+from repro.kernels.ref import pairwise_terms_ref
+from repro.sparse import (NeighborGraph, SparseAffinities, from_dense,
+                          knn_graph, pcg, reverse_graph, sparse_affinities,
+                          sparse_laplacian_eigenmaps, sym_degree,
+                          sym_lap_matvec, to_dense)
 from tests.conftest import three_loops
 
 UNNORM = [("ee", 50.0), ("tee", 10.0), ("epan", 5.0)]
+NORM = [("ssne", 5.0), ("tsne", 2.0)]
 
 
 def _problem(n=41, d_hi=6, seed=0):
@@ -108,10 +111,11 @@ def test_truncated_k_calibration_rowsums():
 # -- energy/gradient parity -----------------------------------------------------
 
 
-@pytest.mark.parametrize("kind,lam", UNNORM)
+@pytest.mark.parametrize("kind,lam", UNNORM + NORM)
 def test_sparse_energy_grad_matches_dense_oracle(kind, lam):
     """Acceptance criterion: <= 1e-4 relative agreement at kappa = N-1
-    with exhaustive negatives."""
+    with exhaustive negatives, for every model family (normalized kinds
+    go through the ratio-estimator path, exact in exhaustive mode)."""
     Y, X = _problem()
     n = Y.shape[0]
     aff = make_affinities(Y, 8.0, model=kind)
@@ -121,6 +125,29 @@ def test_sparse_energy_grad_matches_dense_oracle(kind, lam):
     assert abs(float(E1 - E2)) / abs(float(E1)) < 1e-4
     relG = float(jnp.linalg.norm(G1 - G2) / jnp.linalg.norm(G1))
     assert relG < 1e-4, (kind, relG)
+
+
+@pytest.mark.parametrize("kind,lam", NORM)
+def test_normalized_sparse_parity_1e5(kind, lam):
+    """Tentpole acceptance: sparse ssne/tsne match the dense path to
+    <= 1e-5 energy/grad at k = N-1 with full negatives.  The graph is
+    built FROM the dense weights so the comparison pins the estimator
+    math itself, not the (separately tested) k-candidate calibration."""
+    Y, X = _problem()
+    n = Y.shape[0]
+    aff = make_affinities(Y, 8.0, model=kind)
+    g = from_dense(aff.Wp, k=n - 1)
+    saff = SparseAffinities(graph=g, rev=reverse_graph(g))
+    E1, G1 = energy_and_grad(X, aff, kind, lam)
+    E2, G2 = energy_and_grad_sparse(X, saff, kind, lam, n_negatives=None)
+    relE = abs(float(E1 - E2)) / abs(float(E1))
+    relG = float(jnp.linalg.norm(G1 - G2) / jnp.linalg.norm(G1))
+    assert relE <= 1e-5, (kind, relE)
+    assert relG <= 1e-5, (kind, relG)
+    # the line-search fast path computes the identical energy
+    E3, _ = energy_and_grad_sparse(X, saff, kind, lam, n_negatives=None,
+                                   with_grad=False)
+    assert abs(float(E1 - E3)) / abs(float(E1)) <= 1e-5
 
 
 @pytest.mark.parametrize("kind,lam", [("ee", 50.0), ("tee", 10.0)])
@@ -144,21 +171,78 @@ def test_negative_sampling_unbiased(kind, lam):
     assert relG < 0.1
 
 
-def test_sampled_gradient_translation_invariant():
-    """Symmetric application of sampled edges => columns of G sum to ~0."""
+@pytest.mark.parametrize("kind", ["ee", "tsne"])
+def test_sampled_gradient_translation_invariant(kind):
+    """Symmetric application of sampled edges => columns of G sum to ~0,
+    for the absolute estimator (ee) and the ratio estimator (tsne)."""
     Y, X = _problem()
-    saff = sparse_affinities(Y, k=10, perplexity=5.0, model="ee")
-    _, G = energy_and_grad_sparse(X, saff, "ee", 50.0, n_negatives=6,
+    saff = sparse_affinities(Y, k=10, perplexity=5.0, model=kind)
+    _, G = energy_and_grad_sparse(X, saff, kind, 2.0, n_negatives=6,
                                   key=jax.random.PRNGKey(3))
     colsum = np.asarray(jnp.sum(G, axis=0))
     assert np.all(np.abs(colsum) < 1e-3 * float(jnp.max(jnp.abs(G))))
 
 
-def test_normalized_kinds_rejected():
+# -- ratio estimator for normalized models --------------------------------------
+
+
+@pytest.mark.parametrize("kind,lam", NORM)
+def test_partition_estimate_unbiased_over_seeds(kind, lam):
+    """E[s_hat] = Z: the cyclic-shift draw with the (N-1)/m correction is
+    an unbiased estimator of the global partition function."""
+    Y, X = _problem()
+    aff = make_affinities(Y, 8.0, model=kind)
+    saff = sparse_affinities(Y, k=Y.shape[0] - 1, perplexity=8.0, model=kind)
+    z_true = float(pairwise_terms_ref(X, aff.Wp, aff.Wm, kind).s)
+    zs = [float(energy_and_grad_sparse(
+            X, saff, kind, lam, n_negatives=8, key=jax.random.PRNGKey(s),
+            return_state=True)[2]) for s in range(80)]
+    # the 80-sample mean carries ~sigma/sqrt(80) Monte-Carlo noise; 0.05 is
+    # far below the O(1) error of a biased (uncorrected) estimator
+    assert abs(np.mean(zs) - z_true) / z_true < 0.05
+
+
+def test_streaming_z_ema_update():
+    """Sampled mode: z_new = decay * z_prev + (1 - decay) * s_hat once the
+    state is initialized; an uninitialized (<= 0) state passes s_hat
+    through; exhaustive mode bypasses the EMA entirely (z = s_hat = Z)."""
+    Y, X = _problem()
+    saff = sparse_affinities(Y, k=10, perplexity=5.0, model="ssne")
+    k1, k2 = jax.random.PRNGKey(0), jax.random.PRNGKey(1)
+    args = dict(n_negatives=6, return_state=True)
+    _, _, s1 = energy_and_grad_sparse(X, saff, "ssne", 1.0, key=k1, **args)
+    _, _, s2 = energy_and_grad_sparse(X, saff, "ssne", 1.0, key=k2, **args)
+    # warm state: EMA of the previous z and this draw's s_hat
+    _, _, z = energy_and_grad_sparse(X, saff, "ssne", 1.0, key=k2,
+                                     z_prev=s1, z_decay=0.7, **args)
+    np.testing.assert_allclose(float(z), 0.7 * float(s1) + 0.3 * float(s2),
+                               rtol=1e-6)
+    # uninitialized state (<= 0 sentinel): the draw's own estimate
+    _, _, z0 = energy_and_grad_sparse(X, saff, "ssne", 1.0, key=k2,
+                                      z_prev=jnp.zeros(()), z_decay=0.7,
+                                      **args)
+    np.testing.assert_allclose(float(z0), float(s2), rtol=1e-6)
+    # exhaustive negatives: Z is exact, the EMA is bypassed
+    _, _, ze = energy_and_grad_sparse(X, saff, "ssne", 1.0,
+                                      n_negatives=None, z_prev=s1,
+                                      z_decay=0.7, return_state=True)
+    _, _, ze2 = energy_and_grad_sparse(X, saff, "ssne", 1.0,
+                                       n_negatives=None, return_state=True)
+    np.testing.assert_array_equal(np.asarray(ze), np.asarray(ze2))
+
+
+def test_normalized_kinds_now_supported():
+    """The pre-estimator explicit ValueError is lifted: normalized kinds
+    run through the sparse path (sampled and exhaustive)."""
     Y, X = _problem(n=12)
     saff = sparse_affinities(Y, k=5, perplexity=3.0, model="ssne")
-    with pytest.raises(ValueError):
-        energy_and_grad_sparse(X, saff, "ssne", 1.0, n_negatives=None)
+    E, G = energy_and_grad_sparse(X, saff, "ssne", 1.0, n_negatives=5,
+                                  key=jax.random.PRNGKey(0))
+    assert np.isfinite(float(E)) and np.all(np.isfinite(np.asarray(G)))
+    # return_state is estimator plumbing: meaningless for unnormalized kinds
+    with pytest.raises(ValueError, match="normalized"):
+        energy_and_grad_sparse(X, saff, "ee", 1.0, n_negatives=None,
+                               return_state=True)
 
 
 # -- spectral direction ---------------------------------------------------------
@@ -249,3 +333,18 @@ def test_trainer_sparse_path_descends():
     res = DistributedEmbedding(cfg, mesh).fit(Y)
     assert res.energies[-1] < res.energies[0]
     assert res.X.shape == (Y.shape[0], 2)
+
+
+@pytest.mark.parametrize("kind", ["ssne", "tsne"])
+def test_trainer_sparse_normalized_descends(kind):
+    """EmbedConfig(sparse=True) with a normalized kind routes through the
+    ratio-estimator backend (the pre-tentpole early ValueError is gone)."""
+    from repro.embed.trainer import DistributedEmbedding, EmbedConfig
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    Y = three_loops(n_per=24, loops=2, dim=8)
+    cfg = EmbedConfig(kind=kind, lam=1.0, perplexity=8.0, max_iters=15,
+                      sparse=True, n_neighbors=20, n_negatives=8)
+    res = DistributedEmbedding(cfg, mesh).fit(Y)
+    assert res.energies[-1] < res.energies[0]
+    assert res.X.shape == (Y.shape[0], 2)
+    assert np.all(np.isfinite(res.energies))
