@@ -48,8 +48,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (SD, LSConfig, energy_and_grad_sparse, is_normalized,
-                        make_affinities, minimize)
+from repro.api import Embedding, EmbedSpec
+from repro.core import (energy_and_grad_sparse, is_normalized,
+                        make_affinities)
 from repro.data import mnist_like
 from repro.sparse import (make_sd_operator, make_sharded_energy_grad,
                           make_sharded_sd_operator, pcg,
@@ -75,8 +76,9 @@ def dense_point(Y: Array, kind: str, lam: float, iters: int,
     t_build = time.perf_counter() - t0
     n = Y.shape[0]
     X0 = 1e-2 * jax.random.normal(jax.random.PRNGKey(0), (n, 2))
-    res = minimize(X0, aff, kind, lam, SD(), max_iters=iters, tol=0.0,
-                   ls_cfg=LSConfig(init_step="adaptive_grow"))
+    res = Embedding(EmbedSpec(kind=kind, lam=lam, strategy="sd",
+                              backend="dense", max_iters=iters, tol=0.0)
+                    ).fit(None, X0=X0, aff=aff).result_
     # steady-state per-iteration time: drop the compile-heavy first step
     t_iter = float(np.diff(res.times[1:]).mean()) if iters > 2 else \
         float(res.times[-1] / max(res.n_iters, 1))

@@ -1,94 +1,88 @@
-"""End-to-end embedding driver (the paper's MNIST experiment, Fig. 4):
-data -> affinities -> spectral init -> SD optimization, with checkpointing,
-restart, and a method flag for comparisons.
+"""End-to-end embedding driver (the paper's MNIST experiment, Fig. 4)
+through the unified `repro.api.Embedding` estimator: data -> fit (any
+registered strategy on any backend) -> out-of-sample transform of held-out
+digits, with checkpointing and restart.
 
-    PYTHONPATH=src python examples/mnist_embedding.py --n 2000 --method SD
-    PYTHONPATH=src python examples/mnist_embedding.py --n 2000 --method FP
+    PYTHONPATH=src python examples/mnist_embedding.py --n 2000 --method sd
+    PYTHONPATH=src python examples/mnist_embedding.py --n 2000 --method fp
 
-On a restart with the same --ckpt dir, training resumes from the last saved
-iterate (fault-tolerance demo).
+`--method` is a strategy-registry name (gd, fp, diag, sd, sd-, lbfgs, cg);
+`--backend` any backend-registry name or "auto".  On a restart with the
+same --ckpt dir, training resumes from the last saved iterate and replays
+the uninterrupted trajectory bit-for-bit (fault-tolerance demo).
 """
 import argparse
 import os
-import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.ckpt import Checkpointer
-from repro.core import (LSConfig, laplacian_eigenmaps, make_affinities,
-                        make_strategy, minimize)
-from repro.core.baselines import LBFGS, NonlinearCG
+from repro.api import Embedding, EmbedSpec, available_strategies
 from repro.data import mnist_like
-
-
-def get_strategy(name, kappa):
-    if name == "L-BFGS":
-        return LBFGS(m=100), "one"
-    if name == "CG":
-        return NonlinearCG(), "one"
-    ls = "adaptive_grow" if name.lower().startswith("sd") else "one"
-    kw = {"kappa": kappa} if name.lower() == "sd" and kappa >= 0 else {}
-    return make_strategy(name.lower(), **kw), ls
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=2000)
-    ap.add_argument("--method", default="SD")
+    ap.add_argument("--method", default="sd",
+                    help=f"strategy registry name: {available_strategies()}")
     ap.add_argument("--kind", default="ee", choices=["ee", "ssne", "tsne"])
+    ap.add_argument("--backend", default="dense")
     ap.add_argument("--lam", type=float, default=100.0)
     ap.add_argument("--perplexity", type=float, default=30.0)
     ap.add_argument("--kappa", type=int, default=-1)
     ap.add_argument("--iters", type=int, default=200)
+    ap.add_argument("--holdout", type=int, default=100,
+                    help="points kept out of the fit and placed by "
+                         "transform() afterwards (0 disables)")
     ap.add_argument("--ckpt", default=None)
     a = ap.parse_args()
     lam = 1.0 if a.kind in ("ssne", "tsne") else a.lam
 
-    Y, labels = mnist_like(n=a.n)
-    print(f"data {Y.shape}, 10 classes")
-    aff = make_affinities(jnp.asarray(Y), a.perplexity, model=a.kind)
-    X0 = laplacian_eigenmaps(aff.Wp, 2) * 0.1
+    Y, labels = mnist_like(n=a.n + a.holdout)
+    Y_fit, Y_new = Y[:a.n], Y[a.n:]
+    l_fit, l_new = labels[:a.n], labels[a.n:]
+    print(f"data {Y_fit.shape} fit + {a.holdout} held out, 10 classes")
 
-    ckpt = Checkpointer(a.ckpt) if a.ckpt else None
-    start = 0
-    if ckpt is not None:
-        latest = ckpt.latest_step()
-        if latest is not None:
-            X0 = jnp.asarray(ckpt.restore(latest, X0))
-            start = latest
-            print(f"resumed from checkpoint step {latest}")
-
-    strat, ls = get_strategy(a.method, a.kappa)
+    opts = {"kappa": a.kappa} if a.method.lower() == "sd" and a.kappa >= 0 \
+        else {}
+    spec = EmbedSpec(kind=a.kind, strategy=a.method, backend=a.backend,
+                     lam=lam, perplexity=a.perplexity, max_iters=a.iters,
+                     tol=1e-8, strategy_opts=opts,
+                     checkpoint_dir=a.ckpt, checkpoint_every=50)
 
     def cb(it, X, e):
-        if ckpt is not None and it % 50 == 0:
-            ckpt.save(start + it, X)
         if it % 25 == 0:
-            print(f"  iter {start + it}: E = {e:.4f}")
+            print(f"  iter {it}: E = {e:.4f}")
 
-    res = minimize(X0, aff, a.kind, lam, strat, max_iters=a.iters,
-                   tol=1e-8, ls_cfg=LSConfig(init_step=ls), callback=cb)
-    if ckpt is not None:
-        ckpt.save(start + res.n_iters, res.X)
-    print(f"{a.method}: E {res.energies[0]:.4f} -> {res.energies[-1]:.4f} "
-          f"in {res.n_iters} iters / "
+    emb = Embedding(spec)
+    emb.fit(jnp.asarray(Y_fit), callback=cb)
+    res = emb.result_
+    if res.resumed_from is not None:
+        print(f"resumed from checkpoint step {res.resumed_from}")
+    print(f"{a.method} [{emb.backend_}]: E {res.energies[0]:.4f} -> "
+          f"{res.energies[-1]:.4f} in {res.n_iters} iters / "
           f"{res.times[-1] + res.setup_time:.1f}s (setup "
           f"{res.setup_time:.2f}s)")
 
     os.makedirs("results", exist_ok=True)
     np.savez(f"results/mnist_{a.method}_{a.kind}.npz",
-             X=np.asarray(res.X), labels=labels,
+             X=np.asarray(res.X), labels=l_fit,
              energies=res.energies, times=res.times + res.setup_time)
     # crude quality score: mean same-class vs other-class distance ratio
     X = np.asarray(res.X)
     d2 = ((X[:, None] - X[None, :]) ** 2).sum(-1)
-    same = labels[:, None] == labels[None, :]
+    same = l_fit[:, None] == l_fit[None, :]
     ratio = float(d2[same].mean() / d2[~same].mean())
     print(f"class-compactness ratio (lower better): {ratio:.3f}")
+
+    if a.holdout:
+        # serving: place unseen digits on the frozen map (never re-fits)
+        X_new = np.asarray(emb.transform(jnp.asarray(Y_new)))
+        cents = np.stack([X[l_fit == c].mean(0) for c in range(10)])
+        d = ((X_new[:, None, :] - cents[None]) ** 2).sum(-1)
+        acc = float((d.argmin(1) == l_new).mean())
+        print(f"held-out points nearest own-class centroid: {acc:.0%}")
 
 
 if __name__ == "__main__":

@@ -1,39 +1,48 @@
-"""Quickstart: embed a swiss roll with the spectral direction in ~20 lines.
+"""Quickstart: embed a swiss roll with the spectral direction, then place
+NEW points on the trained map without re-fitting — all through the one
+public estimator (`repro.api.Embedding`).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
 
-from repro.core import (SD, LSConfig, laplacian_eigenmaps, make_affinities,
-                        minimize)
+from repro.api import Embedding, EmbedSpec
 from repro.data import swiss_roll
 
 
 def main():
-    Y = jnp.asarray(swiss_roll(n=800))
-    print(f"data: {Y.shape}")
+    data = jnp.asarray(swiss_roll(n=900))
+    Y, Y_new = data[:800], data[800:]        # hold out 100 points
+    print(f"data: {Y.shape} train, {Y_new.shape} held out")
 
-    # 1. perplexity-calibrated affinities (W+, W-)
-    aff = make_affinities(Y, perplexity=20.0, model="ee")
+    # one declarative spec: model x strategy x backend (+ knobs).
+    # backend="auto" picks dense/sparse x single/multi-device by problem
+    # size and visible devices; strategy is any registry name
+    # (repro.api.available_strategies()).
+    spec = EmbedSpec(kind="ee", strategy="sd", lam=100.0, perplexity=20.0,
+                     max_iters=150, tol=1e-7)
+    emb = Embedding(spec)
+    X = emb.fit_transform(Y)
 
-    # 2. spectral initialization (the lambda = 0 solution)
-    X0 = laplacian_eigenmaps(aff.Wp, d=2) * 0.1
-
-    # 3. minimize the elastic-embedding objective with the spectral direction
-    res = minimize(X0, aff, kind="ee", lam=100.0, strategy=SD(),
-                   max_iters=150, tol=1e-7,
-                   ls_cfg=LSConfig(init_step="adaptive_grow"))
-
-    print(f"E: {res.energies[0]:.1f} -> {res.energies[-1]:.1f} "
-          f"in {res.n_iters} iterations "
+    res = emb.result_
+    print(f"backend={emb.backend_}: E {res.energies[0]:.1f} -> "
+          f"{res.energies[-1]:.1f} in {res.n_iters} iterations "
           f"({res.times[-1] + res.setup_time:.2f}s, "
           f"converged={res.converged})")
+
+    # out-of-sample: kNN affinities against the training set, fixed-anchor
+    # objective — the training embedding is frozen, serving never re-fits
+    X_new = emb.transform(Y_new, max_iters=30)
+    print(f"transformed {X_new.shape[0]} held-out points "
+          f"(training embedding untouched)")
+
     out = "results/quickstart_embedding.npy"
     import os
     import numpy as np
     os.makedirs("results", exist_ok=True)
-    np.save(out, np.asarray(res.X))
-    print(f"embedding saved to {out}")
+    np.save(out, np.asarray(X))
+    np.save("results/quickstart_new_points.npy", np.asarray(X_new))
+    print(f"embeddings saved to {out}")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,8 @@
 """repro: spectral-direction partial-Hessian framework for nonlinear
 embeddings (Vladymyrov & Carreira-Perpinan, ICML 2012) + multi-pod JAX
-LM runtime. See README.md / DESIGN.md."""
+LM runtime. See README.md / DESIGN.md.
+
+Public embedding surface: `repro.api` (Embedding estimator, EmbedSpec,
+strategy/backend registries, out-of-sample transform — docs/api.md)."""
 
 __version__ = "1.0.0"

@@ -1,0 +1,22 @@
+# The one public entry point for fitting and serving embeddings: a
+# declarative EmbedSpec, an Embedding estimator (fit / fit_transform /
+# transform / resume), and open strategy/backend registries that make the
+# paper's partial-Hessian strategies interchangeable on every storage/
+# device path.  See docs/api.md.
+from .estimator import Embedding
+from .registries import (
+    available_backends,
+    available_strategies,
+    register_backend,
+    register_strategy,
+    resolve_backend,
+)
+from .spec import EmbedSpec
+from .transform import TransformObjective, transform_points
+
+__all__ = [
+    "Embedding", "EmbedSpec",
+    "available_backends", "available_strategies",
+    "register_backend", "register_strategy", "resolve_backend",
+    "TransformObjective", "transform_points",
+]

@@ -1,0 +1,85 @@
+"""Backend implementations for the `repro.api` registry.
+
+Each backend is a function `fit(spec, Y, *, X0, aff, mesh, mesh_spec,
+callback) -> EngineResult` composing an `Objective` (core/minimize.py or
+embed/trainer.py builders) with the unified engine (`embed.engine.
+fit_loop`).  The dense backend is the exact glue `core.minimize.minimize`
+has always run — `repro.api` trajectories are bit-identical to the legacy
+driver (pinned in tests/test_api.py).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import laplacian_eigenmaps, make_affinities
+from repro.core.minimize import DenseObjective
+from repro.embed.engine import fit_loop
+from repro.embed.trainer import (build_dense_mesh_objective,
+                                 build_sparse_objective, make_loop_config)
+
+from .registries import attach_backend_impl, strategy_entry
+
+
+def _dense_problem(spec, Y, X0, aff):
+    if aff is None:
+        if Y is None:
+            raise ValueError("fit needs Y (or a precomputed aff=)")
+        aff = make_affinities(jnp.asarray(Y), spec.perplexity,
+                              model=spec.kind)
+    if X0 is None:
+        X0 = laplacian_eigenmaps(aff.Wp, spec.dim) * 0.1
+    return aff, jnp.asarray(X0)
+
+
+def fit_dense(spec, Y, *, X0=None, aff=None, mesh=None, mesh_spec=None,
+              callback=None):
+    """Single-device dense backend: full affinities, any registered
+    strategy, the whole iteration fused into one jitted XLA program
+    (`core/minimize.DenseObjective`)."""
+    aff, X0 = _dense_problem(spec, Y, X0, aff)
+    strategy = strategy_entry(spec.strategy).dense_factory(
+        spec, **dict(spec.strategy_opts))
+    ls = spec.resolved_ls()
+    lam = jnp.asarray(spec.lam, dtype=X0.dtype)
+    obj = DenseObjective(aff, spec.kind, lam, strategy, ls, X0)
+    return fit_loop(obj, X0, make_loop_config(spec, ls), callback)
+
+
+def fit_dense_mesh(spec, Y, *, X0=None, aff=None, mesh=None, mesh_spec=None,
+                   callback=None):
+    if aff is not None:
+        raise ValueError("precomputed aff= is dense-backend-only (the mesh "
+                         "backend shards its own affinities)")
+    obj, X = build_dense_mesh_objective(spec, mesh, mesh_spec, Y, X0,
+                                        strategy=spec.strategy)
+    return fit_loop(obj, X, make_loop_config(spec, spec.resolved_ls()),
+                    callback)
+
+
+def _fit_sparse(spec, Y, X0, mesh, mesh_spec, callback, sharded):
+    obj, X = build_sparse_objective(spec, mesh, mesh_spec, Y, X0,
+                                    strategy=spec.strategy, sharded=sharded)
+    return fit_loop(obj, X, make_loop_config(spec, spec.resolved_ls()),
+                    callback)
+
+
+def fit_sparse(spec, Y, *, X0=None, aff=None, mesh=None, mesh_spec=None,
+               callback=None):
+    if aff is not None:
+        raise ValueError("precomputed aff= is dense-backend-only (the "
+                         "sparse backend builds its own ELL graph)")
+    return _fit_sparse(spec, Y, X0, mesh, mesh_spec, callback, sharded=False)
+
+
+def fit_sparse_sharded(spec, Y, *, X0=None, aff=None, mesh=None,
+                       mesh_spec=None, callback=None):
+    if aff is not None:
+        raise ValueError("precomputed aff= is dense-backend-only (the "
+                         "sparse backend builds its own ELL graph)")
+    return _fit_sparse(spec, Y, X0, mesh, mesh_spec, callback, sharded=True)
+
+
+attach_backend_impl("dense", fit_dense)
+attach_backend_impl("dense-mesh", fit_dense_mesh)
+attach_backend_impl("sparse", fit_sparse)
+attach_backend_impl("sparse-sharded", fit_sparse_sharded)

@@ -1,0 +1,152 @@
+"""`Embedding`: the one public estimator over every backend and strategy.
+
+    from repro.api import Embedding, EmbedSpec
+
+    emb = Embedding(EmbedSpec(kind="tsne", strategy="sd", lam=1.0))
+    X = emb.fit_transform(Y)           # backend picked by N / device count
+    X_new = emb.transform(Y_new)       # out-of-sample, never re-fits
+
+`fit` resolves `backend="auto"` by problem size and visible device count
+(`repro.api.registries.resolve_backend`), builds the backend's
+`Objective`, and runs the unified engine.  After `fit`:
+
+  * `embedding_`  — the (N, dim) training embedding
+  * `result_`     — the full `EngineResult` (energies, times, fevals, …)
+  * `backend_`    — the resolved backend name
+
+`transform(Y_new)` embeds unseen points against the FROZEN training
+embedding (repro/api/transform.py): kNN affinities of the new rows
+against the training set, a fixed-anchor objective over only the new
+coordinates, run through the same `fit_loop`.  Serving new points costs
+O(n_new (k + m) d) per iteration and leaves `embedding_` bit-identical.
+
+`resume()` continues an interrupted fit from `spec.checkpoint_dir` — the
+engine's checkpoint payload carries the line-search and solver state, so
+the resumed trajectory is the uninterrupted one, bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.embed.engine import EngineResult
+
+from . import registries
+from .spec import EmbedSpec
+from .transform import UNSET, transform_points
+
+Array = jnp.ndarray
+
+
+class Embedding:
+    """Estimator facade: `EmbedSpec` in, embedding out.
+
+    `mesh`/`mesh_spec` matter only to the mesh backends (`dense-mesh`,
+    `sparse-sharded`); when omitted, a (n_devices, 1) host mesh is built
+    on demand.  Keyword overrides construct/derive the spec:
+    `Embedding(kind="tsne", lam=1.0)` == `Embedding(EmbedSpec(kind="tsne",
+    lam=1.0))`.
+    """
+
+    def __init__(self, spec: EmbedSpec | None = None, *, mesh=None,
+                 mesh_spec=None, **overrides):
+        if spec is None:
+            spec = EmbedSpec(**overrides)
+        elif overrides:
+            spec = dataclasses.replace(spec, **overrides)
+        self.spec = spec
+        self.mesh = mesh
+        self.mesh_spec = mesh_spec
+
+    # -- fitting ------------------------------------------------------------
+    def _resolve_backend(self, n: int) -> str:
+        n_devices = (self.mesh.devices.size if self.mesh is not None
+                     else jax.device_count())
+        return registries.resolve_backend(
+            self.spec.backend, n=n, n_devices=n_devices,
+            strategy=self.spec.strategy)
+
+    def _mesh_for(self, backend: str):
+        if registries.BACKENDS[backend].needs_mesh and self.mesh is None:
+            from repro.launch.mesh import make_host_mesh
+            self.mesh = make_host_mesh()
+        return self.mesh
+
+    def fit(self, Y: Array | None, X0: Array | None = None,
+            aff=None,
+            callback: Callable[[int, Array, float], None] | None = None
+            ) -> "Embedding":
+        """Fit the embedding.  `Y` is the (N, D) data; the dense backend
+        alternatively accepts precomputed `aff=` (core.Affinities) so
+        benchmark drivers can share one calibration across strategies."""
+        n = Y.shape[0] if Y is not None else aff.Wp.shape[0]
+        if aff is not None and self.spec.backend == "auto":
+            # precomputed dense affinities pin the backend: only the dense
+            # path can consume them, whatever N would otherwise resolve to
+            backend = "dense"
+        else:
+            backend = self._resolve_backend(n)
+        registries.validate_strategy_backend(self.spec.strategy, backend)
+        fit_fn = registries.backend_impl(backend)
+        res: EngineResult = fit_fn(
+            self.spec, Y, X0=X0, aff=aff, mesh=self._mesh_for(backend),
+            mesh_spec=self.mesh_spec, callback=callback)
+        self.backend_ = backend
+        self.result_ = res
+        self.embedding_ = res.X
+        self._Y_train = Y
+        return self
+
+    def fit_transform(self, Y: Array, X0: Array | None = None,
+                      callback=None) -> Array:
+        return self.fit(Y, X0=X0, callback=callback).embedding_
+
+    def resume(self, Y: Array | None = None, max_iters: int | None = None
+               ) -> "Embedding":
+        """Continue a checkpointed fit (bit-identical to the uninterrupted
+        trajectory — the engine's payload carries line-search and solver
+        state).  `max_iters` extends the iteration budget."""
+        if self.spec.checkpoint_dir is None:
+            raise ValueError("resume() needs spec.checkpoint_dir")
+        if Y is None:
+            Y = getattr(self, "_Y_train", None)
+            if Y is None:
+                raise ValueError("resume() needs Y (no prior fit in this "
+                                 "process to take it from)")
+        if max_iters is not None:
+            self.spec = dataclasses.replace(self.spec, max_iters=max_iters)
+        return self.fit(Y)
+
+    # -- serving ------------------------------------------------------------
+    def transform(self, Y_new: Array, *, max_iters: int | None = None,
+                  n_negatives: int | None = UNSET,
+                  tol: float | None = None) -> Array:
+        """Embed unseen points against the frozen training embedding.
+
+        Never re-fits: the training coordinates enter as constants, so
+        `embedding_` is bit-identical before and after.  `n_negatives`
+        defaults to `spec.transform_negatives`; pass `None` for the
+        exhaustive (deterministic) anchored repulsion.  Requires the fit
+        to have seen raw `Y` (not only precomputed affinities)."""
+        if getattr(self, "embedding_", None) is None:
+            raise ValueError("transform() requires a fitted estimator")
+        if getattr(self, "_Y_train", None) is None:
+            raise ValueError(
+                "transform() needs the raw training Y; this estimator was "
+                "fit from precomputed affinities only")
+        X_new, res = transform_points(
+            self.spec, self._Y_train, self.embedding_, Y_new,
+            max_iters=max_iters, n_negatives=n_negatives, tol=tol)
+        self.last_transform_result_ = res
+        return X_new
+
+    # -- introspection ------------------------------------------------------
+    def __repr__(self):
+        fitted = getattr(self, "backend_", None)
+        state = f"fitted[{fitted}]" if fitted else "unfitted"
+        return (f"Embedding(kind={self.spec.kind!r}, "
+                f"strategy={self.spec.strategy!r}, "
+                f"backend={self.spec.backend!r}, {state})")

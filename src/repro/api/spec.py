@@ -1,0 +1,87 @@
+"""`EmbedSpec`: the one declarative description of an embedding problem.
+
+Replaces the ad-hoc `EmbedConfig` kwarg pile: every knob of every backend
+lives here, and the three names that select *what runs* — `kind`
+(model family), `strategy` (search direction) and `backend` (storage/
+device path) — are validated against their registries at CONSTRUCTION, so
+a typo fails immediately with the list of valid names instead of deep
+inside a run.
+
+The spec is frozen: `replace()` (dataclasses semantics) derives variants,
+which is how `Embedding.resume` extends budgets without mutating the
+estimator's configuration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+from repro.core.linesearch import LSConfig
+from repro.kernels.ref import KINDS
+
+from . import registries
+
+
+def validate_kind(kind: str) -> str:
+    if kind not in KINDS:
+        raise ValueError(
+            f"unknown kind {kind!r}; supported model families: "
+            f"{sorted(KINDS)}")
+    return kind
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbedSpec:
+    """Declarative embedding problem: model x strategy x backend + knobs.
+
+    `strategy` accepts any registered name (`repro.api.available_
+    strategies()`); `backend` any registered backend or ``"auto"`` (pick by
+    N and device count).  `ls=None` resolves to the strategy's default
+    initial-step policy (``adaptive_grow`` for the SD family, ``one``
+    otherwise — the paper's conventions).  `strategy_opts` is forwarded to
+    the strategy factory (e.g. ``{"kappa": 7}`` for sparsified SD).
+    """
+
+    kind: str = "ee"
+    strategy: str = "sd"
+    backend: str = "auto"
+    lam: float = 100.0
+    perplexity: float = 20.0
+    dim: int = 2
+    max_iters: int = 200
+    tol: float = 1e-7
+    mu_scale: float = 1e-5
+    ls: LSConfig | None = None
+    checkpoint_dir: str | None = None
+    checkpoint_every: int = 50
+    seed: int = 0
+    max_seconds: float | None = None
+    strategy_opts: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    # sparse neighbor-graph knobs (docs/sparse.md)
+    n_neighbors: int = 0          # ELL width k; 0 => auto (3 * perplexity)
+    n_negatives: int = 5          # uniform negative samples per point
+    z_ema_decay: float = 0.9      # streaming partition-function EMA
+    knn_method: str = "auto"      # 'exact' | 'approx' | 'auto'
+    cg_tol: float = 1e-3
+    cg_maxiter: int = 100
+    # out-of-sample transform() (repro/api/transform.py)
+    transform_iters: int = 100
+    transform_negatives: int = 50  # anchor negatives per application
+
+    def __post_init__(self):
+        validate_kind(self.kind)
+        object.__setattr__(
+            self, "strategy", registries.canonical_strategy(self.strategy))
+        registries.validate_backend(self.backend)
+        registries.validate_strategy_backend(self.strategy, self.backend)
+
+    def resolved_ls(self) -> LSConfig:
+        """The line-search config, with the strategy's default initial-step
+        policy filled in when `ls` is None."""
+        if self.ls is not None:
+            return self.ls
+        entry = registries.strategy_entry(self.strategy)
+        return LSConfig(init_step=entry.default_ls_init)
+
+    def replace(self, **changes) -> "EmbedSpec":
+        return dataclasses.replace(self, **changes)

@@ -1,0 +1,167 @@
+"""Out-of-sample `transform()`: embed unseen points against a FROZEN
+training embedding, never re-fitting.
+
+The standard fixed-anchor extension (surveyed in Ghojogh & Ghodsi 2020;
+the serving motivation of FUnc-SNE): the training pairs (Y_train,
+X_train) define the map, and a new point y is embedded by minimizing the
+SAME attraction-repulsion energy restricted to its own coordinates, with
+every training coordinate held constant:
+
+  * attraction — kNN affinities of y against the TRAINING set, calibrated
+    per row to the spec's perplexity exactly as in training
+    (`sparse.graph.calibrated_weights_ell` over the `knn_cross`
+    candidates);
+  * repulsion — y against `transform_negatives` uniformly sampled training
+    anchors, scaled by N/m (the unbiased estimate of repulsion against the
+    whole training set; `None`/m >= N runs exhaustively and
+    deterministically).  Normalized kinds (ssne/tsne) use each new point's
+    OWN partition function over the anchors, log-weighted as in training.
+
+Because the anchors never move, the free problem is separable across new
+points (no new-new interactions), the Hessian's attractive part is
+diagonal, and each `transform` costs O(n_new * (k + m) * d) per iteration
+— serving-scale, independent of how long training took.  Gradients come
+from autodiff of the anchored energy (the hand-derived Laplacian forms
+exist for the training objective's symmetric pair structure, which the
+anchored problem doesn't have), and the optimization runs through the
+same `fit_loop` engine as every fit backend.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.objectives import (attractive_edge_terms, is_normalized,
+                                   negative_pair_terms)
+from repro.embed.engine import LoopConfig, fit_loop
+from repro.sparse.graph import calibrated_weights_ell, knn_cross
+
+Array = jnp.ndarray
+
+
+class TransformObjective:
+    """Fixed-anchor objective over the new rows only (engine protocol).
+
+    `stochastic` follows the negative draw: sampled anchors make the
+    engine thread one fold_in key per iteration (common-random-numbers
+    line search + EMA convergence), the exhaustive mode is deterministic.
+    """
+
+    def __init__(self, kind: str, lam, anchors: Array, nn_idx: Array,
+                 nn_w: Array, n_negatives: int | None):
+        n_train = anchors.shape[0]
+        exhaustive = n_negatives is None or n_negatives >= n_train
+        self.stochastic = not exhaustive
+        self._anchors = anchors
+        normalized = is_normalized(kind)
+        lam = jnp.asarray(lam, anchors.dtype)
+
+        if exhaustive:
+            J0 = jnp.arange(n_train, dtype=jnp.int32)
+            scale = 1.0
+        else:
+            scale = n_train / n_negatives
+
+        def draw(key):
+            if exhaustive:
+                return J0
+            return jax.random.choice(
+                key, n_train, shape=(n_negatives,),
+                replace=False).astype(jnp.int32)
+
+        def energy(X, J):
+            # attraction: calibrated kNN edges to fixed anchors
+            t_att = jnp.sum((X[:, None, :] - anchors[nn_idx]) ** 2, axis=-1)
+            e_plus = jnp.sum(attractive_edge_terms(kind, nn_w, t_att)[0])
+            # repulsion: shared anchor draw J across rows
+            t_neg = jnp.sum((X[:, None, :] - anchors[J]) ** 2, axis=-1)
+            s_row = scale * jnp.sum(negative_pair_terms(kind, t_neg)[0],
+                                    axis=1)                    # (n_new,)
+            if normalized:
+                # per-point partition function — the out-of-sample analogue
+                # of the training models' global log Z
+                return e_plus + lam * jnp.sum(
+                    jnp.log(jnp.maximum(s_row, 1e-30)))
+            return e_plus + lam * jnp.sum(s_row)
+
+        self._draw = draw
+        self._e = jax.jit(energy)
+        self._vg = jax.jit(jax.value_and_grad(energy))
+        # anchored attractive Hessian is diagonal: B = 4 diag(row deg) + mu
+        # (frozen at X = 0 as in the SD family; calibrated rows sum to ~1)
+        deg = jnp.sum(nn_w, axis=1)
+        mu = jnp.maximum(1e-10 * jnp.min(4.0 * deg),
+                         1e-5 * jnp.mean(4.0 * deg))
+        self._inv_diag = 1.0 / (4.0 * deg + mu)
+
+    def energy_and_grad(self, X, key):
+        E, G = self._vg(X, self._draw(key))
+        return E, G
+
+    def energy(self, X, key):
+        return self._e(X, self._draw(key))
+
+    def make_direction_solver(self):
+        def solve(state, X, G):
+            return -self._inv_diag[:, None] * G, state
+
+        return solve, ()
+
+
+@functools.partial(jax.jit, static_argnames=("k", "perplexity"))
+def _anchor_affinities(Y_new, Y_train, k: int, perplexity: float):
+    d2, idx = knn_cross(Y_new, Y_train, k)
+    w = calibrated_weights_ell(d2, jnp.ones_like(idx, dtype=bool),
+                               perplexity)
+    return idx, w
+
+
+#: distinguishes "use spec.transform_negatives" (unset) from an explicit
+#: ``n_negatives=None`` (exhaustive, deterministic repulsion)
+UNSET = object()
+
+
+def transform_points(spec, Y_train: Array, X_train: Array, Y_new: Array,
+                     *, max_iters: int | None = None,
+                     n_negatives: int | None = UNSET,
+                     tol: float | None = None):
+    """Embed `Y_new` against the frozen (Y_train, X_train) map.
+
+    Returns `(X_new, EngineResult)`; an empty `Y_new` short-circuits to an
+    empty embedding (result None).  X_train is only ever READ — the
+    training embedding stays bit-identical through any number of
+    transforms.  `n_negatives=None` switches the anchored repulsion to
+    the exhaustive (every training anchor, deterministic) mode.
+    """
+    Y_train = jnp.asarray(Y_train)
+    Y_new = jnp.asarray(Y_new)
+    anchors = jnp.asarray(X_train)
+    if Y_new.shape[0] == 0:
+        return jnp.zeros((0, anchors.shape[1]), anchors.dtype), None
+    n_train = Y_train.shape[0]
+    k = spec.n_neighbors or int(3 * spec.perplexity)
+    k = min(k, n_train)
+    if k < spec.perplexity:
+        raise ValueError(
+            f"transform k={k} < perplexity={spec.perplexity}: the "
+            f"candidate entropy cannot reach log(perplexity) "
+            f"(use more training points or a smaller perplexity)")
+    idx, w = _anchor_affinities(Y_new, Y_train, k, float(spec.perplexity))
+
+    m = spec.transform_negatives if n_negatives is UNSET else n_negatives
+    obj = TransformObjective(spec.kind, spec.lam, anchors, idx, w, m)
+
+    # init each new point at its calibrated anchor barycenter — already a
+    # good embedding when the neighborhood is coherent; the fit sharpens it
+    X0 = jnp.einsum("mk,mkd->md", w, anchors[idx])
+
+    cfg = LoopConfig(
+        max_iters=spec.transform_iters if max_iters is None else max_iters,
+        tol=spec.tol if tol is None else tol,
+        ls=spec.resolved_ls(),
+        seed=spec.seed,
+    )
+    res = fit_loop(obj, X0, cfg)
+    return res.X, res

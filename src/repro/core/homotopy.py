@@ -15,7 +15,7 @@ import numpy as np
 
 from .affinities import Affinities
 from .linesearch import LSConfig
-from .minimize import MinimizeResult, minimize
+from .minimize import MinimizeResult, _minimize
 
 Array = jnp.ndarray
 
@@ -51,7 +51,7 @@ def homotopy_path(
     X = X0
     results: list[MinimizeResult] = []
     for lam in lambdas:
-        res = minimize(
+        res = _minimize(
             X, aff, kind, jnp.asarray(lam, X0.dtype), strategy,
             max_iters=max_iters, tol=tol, ls_cfg=ls_cfg,
         )

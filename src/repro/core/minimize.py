@@ -121,6 +121,32 @@ def minimize(
     callback: Callable[[int, Array, float], None] | None = None,
     max_seconds: float | None = None,
 ) -> MinimizeResult:
+    """DEPRECATED: use `repro.api.Embedding` (the dense backend runs this
+    exact glue — trajectories are bit-identical).  Kept as a shim for
+    legacy call sites."""
+    import warnings
+
+    warnings.warn(
+        "core.minimize.minimize is deprecated; use repro.api.Embedding "
+        "with backend='dense' (bit-identical trajectories)",
+        DeprecationWarning, stacklevel=2)
+    return _minimize(X0, aff, kind, lam, strategy, max_iters=max_iters,
+                     tol=tol, ls_cfg=ls_cfg, callback=callback,
+                     max_seconds=max_seconds)
+
+
+def _minimize(
+    X0: Array,
+    aff: Affinities,
+    kind: str,
+    lam,
+    strategy,
+    max_iters: int = 500,
+    tol: float = 1e-7,
+    ls_cfg: LSConfig = LSConfig(),
+    callback: Callable[[int, Array, float], None] | None = None,
+    max_seconds: float | None = None,
+) -> MinimizeResult:
     """Minimize E(X; lam) with the given search-direction strategy.
 
     Stops on relative energy decrease < tol, on max_iters, or (for the

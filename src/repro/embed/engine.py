@@ -179,6 +179,7 @@ def fit_loop(
     start_it, resumed_from = 0, None
     ema = None
     obj_carry = None
+    saved_eg = None
     if ckpt is not None:
         latest = ckpt.latest_step()
         if latest is not None:
@@ -187,12 +188,17 @@ def fit_loop(
             if carry is not None:
                 template["obj"] = carry()
             try:
-                payload = ckpt.restore(latest, template)
+                payload = ckpt.restore(
+                    latest, {**template, "E": np.zeros(()), "G": X})
             except ValueError:
-                # pre-engine checkpoints stored a bare X: resume from it
-                # with fresh line-search/solver state
-                payload = {"X": ckpt.restore(latest, X), "alpha": 1.0,
-                           "ema": None, "state": state}
+                try:
+                    # pre-(E, G) payloads: resume re-evaluates at X
+                    payload = ckpt.restore(latest, template)
+                except ValueError:
+                    # pre-engine checkpoints stored a bare X: resume from
+                    # it with fresh line-search/solver state
+                    payload = {"X": ckpt.restore(latest, X), "alpha": 1.0,
+                               "ema": None, "state": state}
             X = _place(objective, jnp.asarray(payload["X"]))
             alpha_host = float(payload["alpha"])
             alpha_dev = jnp.asarray(alpha_host, dtype=X0.dtype)
@@ -200,11 +206,22 @@ def fit_loop(
                    if payload["ema"] is not None else None)
             state = payload["state"]
             obj_carry = payload.get("obj")
+            if "E" in payload and not stochastic:
+                saved_eg = (payload["E"], payload["G"])
             start_it, resumed_from = latest, latest
 
     key0 = jax.random.PRNGKey(cfg.seed + 1) if stochastic else None
     key = jax.random.fold_in(key0, start_it) if stochastic else None
-    E, G = jax.block_until_ready(objective.energy_and_grad(X, key))
+    if saved_eg is not None:
+        # deterministic resume: reuse the checkpointed (E, G) rather than
+        # re-evaluating — the fused-step backends produce (E, G) through a
+        # differently-fused XLA program than a standalone energy_and_grad,
+        # and bit-identical resume requires feeding iteration start_it + 1
+        # exactly the values the uninterrupted run computed
+        E = jnp.asarray(float(saved_eg[0]), X0.dtype)
+        G = _place(objective, jnp.asarray(saved_eg[1]))
+    else:
+        E, G = jax.block_until_ready(objective.energy_and_grad(X, key))
     if obj_carry is not None:
         # re-install the checkpointed objective state AFTER the initial
         # energy/grad call (which may have advanced it), so iteration
@@ -226,6 +243,10 @@ def fit_loop(
                 "alpha": np.asarray(alpha_host, np.float64),
                 "ema": np.asarray(ema, np.float64),
                 "state": state,
+                # current (E, G) so a deterministic resume replays the
+                # uninterrupted trajectory bit-for-bit without re-fusing
+                "E": np.asarray(energies[-1], np.float64),
+                "G": np.asarray(G),
             }
             if carry is not None:
                 payload["obj"] = carry()

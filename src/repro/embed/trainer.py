@@ -1,28 +1,37 @@
-"""End-to-end distributed embedding trainer: the paper's full pipeline
-(affinities -> spectral init -> SD optimization) on an arbitrary mesh,
-with checkpoint/restart.
+"""Mesh-aware `Objective` backends for the unified fit engine, plus the
+legacy `DistributedEmbedding`/`EmbedConfig` entry points (now thin
+deprecation shims over `repro.api.Embedding`).
 
-The optimization loop itself lives in embed/engine.py (`fit_loop`); this
-module contributes the mesh-aware `Objective` backends:
+The optimization loop lives in embed/engine.py (`fit_loop`); this module
+contributes the backend builders the public API composes:
 
-  * dense 2-D-sharded: the N x N affinities are 2-D sharded and the solve
-    is block-Jacobi (DESIGN.md §3.4); on a single device the same code runs
-    with a (1, 1) mesh, which is how the CPU tests exercise every code path.
-  * sparse single-device: `EmbedConfig(sparse=True)` switches to the
-    O(N (k + m) d) neighbor-graph pipeline (docs/sparse.md) — k-NN
-    affinities in ELL storage, negative-sampled repulsion, matrix-free
-    Jacobi-CG spectral direction; no (N, N) array anywhere.  Normalized
-    models (ssne/tsne) run through the sampled ratio estimator for the
-    partition function, with a streaming (EMA) Z estimate threaded through
-    the objective and checkpointed so resumed runs stay bit-identical.
-  * sparse row-sharded: the same pipeline on a multi-device mesh, with the
-    ELL graph + reverse graph row-sharded (sparse/sharding.py).  Mesh
+  * `build_dense_mesh_objective` — the N x N affinities 2-D sharded; the
+    spectral direction is solved block-Jacobi (DESIGN.md §3.4).  On a
+    single device the same code runs with a (1, 1) mesh, which is how the
+    CPU tests exercise every code path.
+  * `build_sparse_objective` — the O(N (k + m) d) neighbor-graph pipeline
+    (docs/sparse.md): k-NN affinities in ELL storage, negative-sampled
+    repulsion, matrix-free direction solves; no (N, N) array anywhere.
+    Normalized models (ssne/tsne) run through the sampled ratio estimator
+    for the partition function, with a streaming (EMA) Z estimate threaded
+    through the objective and checkpointed so resumed runs stay
+    bit-identical.  With `sharded=True` the same pipeline row-shards the
+    ELL graph + reverse graph over the mesh (sparse/sharding.py); mesh
     shapes the sparse path can't use (a >1-sized column axis) are rejected
     with a clear error.
+
+Both builders take a `strategy` name (the `repro.api` strategy registry):
+the spectral direction (``sd``, the default) plus its diagonal
+degenerations ``fp`` (B = 4 D+ + mu I — the paper's fixed-point iteration,
+realized here from the same degree vector that Jacobi-preconditions the
+sparse CG) and ``gd`` (B = I).  Strategies that need dense Hessian terms
+(``diag``, ``sd-``) are dense-backend-only and rejected by the registry
+before a builder ever runs.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable
 
 import jax
@@ -32,7 +41,10 @@ from jax.sharding import Mesh
 
 from repro.core import (energy_and_grad_sparse, is_normalized,
                         laplacian_eigenmaps, make_affinities)
+from repro.core.laplacian import degree
 from repro.core.linesearch import LSConfig
+from repro.core.objectives import attractive_weights
+from repro.core.strategies import _jitter
 from repro.sparse import (make_sd_operator, make_sharded_energy_grad,
                           make_sharded_sd_operator, pcg,
                           shard_sparse_affinities, sparse_affinities,
@@ -55,6 +67,11 @@ Array = jnp.ndarray
 
 @dataclasses.dataclass
 class EmbedConfig:
+    """DEPRECATED: use `repro.api.EmbedSpec` (declarative spec with
+    strategy/backend registries).  Kept as a validating shim: unknown
+    `kind`/`strategy` fail at construction with the registry's valid
+    names, and `DistributedEmbedding` converts to an `EmbedSpec`."""
+
     kind: str = "ee"
     lam: float = 100.0
     perplexity: float = 20.0
@@ -62,6 +79,7 @@ class EmbedConfig:
     max_iters: int = 200
     tol: float = 1e-7
     mu_scale: float = 1e-5
+    strategy: str = "sd"
     ls: LSConfig = dataclasses.field(
         default_factory=lambda: LSConfig(init_step="adaptive_grow")
     )
@@ -83,6 +101,37 @@ class EmbedConfig:
     cg_tol: float = 1e-3
     cg_maxiter: int = 100
 
+    def __post_init__(self):
+        # early validation through the api registries (deferred import:
+        # repro.api.backends imports this module)
+        from repro.api.registries import canonical_strategy
+        from repro.api.spec import validate_kind
+
+        validate_kind(self.kind)
+        self.strategy = canonical_strategy(self.strategy)
+        warnings.warn(
+            "EmbedConfig is deprecated; use repro.api.EmbedSpec "
+            "(strategy/backend registries, one spec for every backend)",
+            DeprecationWarning, stacklevel=2)
+
+    def to_spec(self, n_devices: int = 1):
+        """The equivalent `repro.api.EmbedSpec` (sparse flag -> backend)."""
+        from repro.api.spec import EmbedSpec
+
+        if self.sparse:
+            backend = "sparse-sharded" if n_devices > 1 else "sparse"
+        else:
+            backend = "dense-mesh"
+        return EmbedSpec(
+            kind=self.kind, strategy=self.strategy, backend=backend,
+            lam=self.lam, perplexity=self.perplexity, dim=self.dim,
+            max_iters=self.max_iters, tol=self.tol, mu_scale=self.mu_scale,
+            ls=self.ls, checkpoint_dir=self.checkpoint_dir,
+            checkpoint_every=self.checkpoint_every, seed=self.seed,
+            n_neighbors=self.n_neighbors, n_negatives=self.n_negatives,
+            z_ema_decay=self.z_ema_decay, knn_method=self.knn_method,
+            cg_tol=self.cg_tol, cg_maxiter=self.cg_maxiter)
+
 
 @dataclasses.dataclass
 class FitResult:
@@ -93,48 +142,60 @@ class FitResult:
     resumed_from: int | None
 
 
-def _to_fit_result(res: EngineResult) -> FitResult:
+def to_fit_result(res: EngineResult) -> FitResult:
     return FitResult(X=res.X, energies=res.energies, times=res.times,
                      n_iters=res.n_iters, resumed_from=res.resumed_from)
 
 
+def make_loop_config(cfg, ls: LSConfig) -> LoopConfig:
+    """LoopConfig from any spec-shaped config (EmbedSpec or EmbedConfig)."""
+    return LoopConfig(
+        max_iters=cfg.max_iters, tol=cfg.tol, ls=ls,
+        checkpoint_dir=cfg.checkpoint_dir,
+        checkpoint_every=cfg.checkpoint_every, seed=cfg.seed,
+        max_seconds=getattr(cfg, "max_seconds", None),
+    )
+
+
+def default_mesh_spec(mesh: Mesh) -> EmbedMeshSpec:
+    names = mesh.axis_names
+    return EmbedMeshSpec(row_axes=tuple(names[:-1]) or (names[0],),
+                         col_axis=names[-1])
+
+
 class _DenseMeshObjective:
-    """Dense 2-D-sharded backend: distributed energy/grad + block-Jacobi
-    direction solves.  Deterministic (key is ignored)."""
+    """Dense 2-D-sharded backend: distributed energy/grad + a pluggable
+    direction solve.  Deterministic (key is ignored)."""
 
     stochastic = False
 
-    def __init__(self, emb: "DistributedEmbedding", Wp, Wm, lam):
-        self._emb = emb
-        self._Wp, self._Wm, self._lam = Wp, Wm, lam
+    def __init__(self, mesh, eg, solver_factory, place):
+        self._mesh = mesh
+        self._eg = eg
+        self._solver_factory = solver_factory
+        self._place = place
 
     def energy_and_grad(self, X, key):
-        return self._emb._eg(X, self._Wp, self._Wm, self._lam)
+        return self._eg(X)
 
     def energy(self, X, key):
-        return self._emb._eg(X, self._Wp, self._Wm, self._lam)[0]
+        return self._eg(X)[0]
 
     def make_direction_solver(self):
-        emb = self._emb
-        R = emb._bj_setup(self._Wp)              # block-Jacobi factors
-
-        def solve(state, X, G):
-            G_sh = shard_rows(emb.mesh, emb.spec, G)
-            P = emb._bj_solve(R, G_sh)
-            return replicate(emb.mesh, P), state
-
-        return solve, ()
+        return self._solver_factory()
 
     def place(self, X):
-        return replicate(self._emb.mesh, X)
+        return self._place(X)
 
 
 class _SparseObjective:
-    """Sparse backend over prebuilt jitted (eg, e_only, cg-solve) closures;
-    identical shape for the single-device and row-sharded variants.
-    Stochastic: the engine draws one fold_in key per iteration, so the line
-    search descends a deterministic surrogate (common random numbers) and
-    convergence is tested on an EMA of the surrogate energies."""
+    """Sparse backend over prebuilt jitted (eg, e_only, direction-solve)
+    closures; identical shape for the single-device and row-sharded
+    variants.  Stochastic: the engine draws one fold_in key per iteration,
+    so the line search descends a deterministic surrogate (common random
+    numbers) and convergence is tested on an EMA of the surrogate
+    energies.  `solve(G, P0) -> P` may use P0 as a warm start (the PCG
+    spectral direction does; the diagonal strategies ignore it)."""
 
     stochastic = True
 
@@ -186,144 +247,202 @@ class _NormalizedSparseObjective(_SparseObjective):
         self._z = jnp.asarray(z)
 
 
-class DistributedEmbedding:
-    """Spectral-direction embedding on a device mesh."""
+# -- backend builders -----------------------------------------------------------
 
-    def __init__(self, cfg: EmbedConfig, mesh: Mesh,
-                 spec: EmbedMeshSpec | None = None):
-        self.cfg = cfg
-        self.mesh = mesh
-        if spec is None:
-            names = mesh.axis_names
-            spec = EmbedMeshSpec(row_axes=tuple(names[:-1]) or (names[0],),
-                                 col_axis=names[-1])
-        self.spec = spec
-        # W- == 1 off-diagonal for every supported affinity builder: use the
-        # storage-free repulsion path (2x less O(N^2) state and traffic)
-        self._eg_unit = make_distributed_energy_grad(mesh, spec, cfg.kind,
-                                                     unit_wm=True)
-        self._eg = lambda X, Wp, Wm, lam: self._eg_unit(X, Wp, lam)
-        self._bj_setup = make_block_jacobi_setup(mesh, spec, cfg.mu_scale)
-        self._bj_solve = make_block_jacobi_solve(mesh, spec)
 
-    def _loop_cfg(self) -> LoopConfig:
-        cfg = self.cfg
-        return LoopConfig(
-            max_iters=cfg.max_iters, tol=cfg.tol, ls=cfg.ls,
-            checkpoint_dir=cfg.checkpoint_dir,
-            checkpoint_every=cfg.checkpoint_every, seed=cfg.seed,
-        )
+def build_dense_mesh_objective(cfg, mesh: Mesh,
+                               mspec: EmbedMeshSpec | None = None,
+                               Y: Array | None = None,
+                               X0: Array | None = None,
+                               strategy: str = "sd"):
+    """(objective, X) for the dense 2-D-sharded backend.
 
-    # -- data preparation ---------------------------------------------------
-    def prepare(self, Y: Array):
-        """Affinities + spectral init, placed on the mesh."""
-        cfg = self.cfg
-        aff = make_affinities(Y, cfg.perplexity, model=cfg.kind)
-        X0 = laplacian_eigenmaps(aff.Wp, cfg.dim) * 0.1
-        Wp = shard_pairwise(self.mesh, self.spec, aff.Wp)
-        Wm = shard_pairwise(self.mesh, self.spec, aff.Wm)
-        return Wp, Wm, replicate(self.mesh, X0)
+    Strategies: ``sd`` (block-Jacobi Cholesky per row-block — the sharded
+    realization of the spectral direction), ``fp`` (B = 4 D+ + mu I with
+    the full degree vector, computed once from the dense affinities before
+    they are sharded), ``gd``.
+    """
+    if mspec is None:
+        mspec = default_mesh_spec(mesh)
+    aff = make_affinities(jnp.asarray(Y), cfg.perplexity, model=cfg.kind)
+    X = jnp.asarray(X0) if X0 is not None \
+        else laplacian_eigenmaps(aff.Wp, cfg.dim) * 0.1
+    lam = jnp.asarray(cfg.lam, X.dtype)
 
-    # -- optimization -------------------------------------------------------
-    def fit(self, Y: Array, X0: Array | None = None,
-            callback: Callable[[int, Array, float], None] | None = None
-            ) -> FitResult:
-        cfg = self.cfg
-        if cfg.sparse:
-            return self._fit_sparse(Y, X0, callback)
-        Wp, Wm, X_init = self.prepare(Y)
-        X = replicate(self.mesh, X0) if X0 is not None else X_init
-        lam = jnp.asarray(cfg.lam, X.dtype)
-        obj = _DenseMeshObjective(self, Wp, Wm, lam)
-        return _to_fit_result(fit_loop(obj, X, self._loop_cfg(), callback))
+    # W- == 1 off-diagonal for every supported affinity builder: use the
+    # storage-free repulsion path (2x less O(N^2) state and traffic)
+    eg_unit = make_distributed_energy_grad(mesh, mspec, cfg.kind,
+                                           unit_wm=True)
+    Wp = shard_pairwise(mesh, mspec, aff.Wp)
+    eg = lambda X: eg_unit(X, Wp, lam)
+    place = lambda X: replicate(mesh, X)
 
-    # -- sparse pipeline ----------------------------------------------------
-    def _sparse_init(self, saff, n: int):
-        """Spectral init: dense eigendecomposition while affordable, block
-        power iteration on the ELL graph above that (sparse/linalg.py)."""
-        cfg = self.cfg
-        if n <= 2048:
-            A = to_dense(saff.graph)
-            return laplacian_eigenmaps(0.5 * (A + A.T), cfg.dim) * 0.1
-        return sparse_laplacian_eigenmaps(
-            saff.graph, saff.rev, d=cfg.dim, seed=cfg.seed) * 0.1
+    if strategy == "sd":
+        bj_setup = make_block_jacobi_setup(mesh, mspec, cfg.mu_scale)
+        bj_solve = make_block_jacobi_solve(mesh, mspec)
 
-    def _fit_sparse(self, Y: Array, X0: Array | None,
-                    callback: Callable[[int, Array, float], None] | None
-                    ) -> FitResult:
-        """O(N (k + m) d) per iteration: ELL affinities, negative-sampled
-        repulsion, matrix-free Jacobi-CG spectral direction.  On a
-        multi-device mesh the graph is row-sharded (sparse/sharding.py)."""
-        cfg = self.cfg
-        normalized = is_normalized(cfg.kind)
-        n = Y.shape[0]
-        k = cfg.n_neighbors or min(int(3 * cfg.perplexity), n - 1)
-        if k < cfg.perplexity:
-            raise ValueError(
-                f"n_neighbors={k} < perplexity={cfg.perplexity}: the "
-                f"k-candidate entropy cannot reach log(perplexity), so the "
-                f"calibration would silently degenerate to uniform weights; "
-                f"use n_neighbors >= 3 * perplexity (or 0 for auto)")
-        multi_device = self.mesh.devices.size > 1
-        if multi_device:
-            # fail fast on unusable mesh shapes, before the k-NN build
-            validate_sparse_mesh(self.mesh, self.spec.row_axes)
-        lam = jnp.asarray(cfg.lam, jnp.float32)
-        saff = sparse_affinities(jnp.asarray(Y), k=k,
-                                 perplexity=cfg.perplexity, model=cfg.kind,
-                                 method=cfg.knn_method)
-        X = jnp.asarray(X0) if X0 is not None else self._sparse_init(saff, n)
+        def solver_factory():
+            R = bj_setup(Wp)                     # block-Jacobi factors
 
-        if multi_device:
-            sg = shard_sparse_affinities(self.mesh, self.spec.row_axes, saff)
-            eg_l, e_l = make_sharded_energy_grad(
-                self.mesh, self.spec.row_axes, sg, cfg.kind,
-                n_negatives=cfg.n_negatives, z_decay=cfg.z_ema_decay)
-            if normalized:
-                eg = lambda X, key, z: eg_l(X, lam, key, z)
-            else:
-                eg = lambda X, key: eg_l(X, lam, key)
-            e_only = lambda X, key: e_l(X, lam, key)
-            matvec, inv_diag, _ = make_sharded_sd_operator(
-                self.mesh, self.spec.row_axes, sg, saff, cfg.mu_scale)
-            place = lambda X: replicate(self.mesh, X)
-            X = place(X)
+            def solve(state, X, G):
+                G_sh = shard_rows(mesh, mspec, G)
+                return replicate(mesh, bj_solve(R, G_sh)), state
+
+            return solve, ()
+    elif strategy == "fp":
+        dp = degree(attractive_weights(aff, cfg.kind))
+        inv_diag = 1.0 / (4.0 * dp + _jitter(jnp.min(dp), jnp.mean(dp)))
+
+        def solver_factory():
+            def solve(state, X, G):
+                return -inv_diag[:, None] * G, state
+
+            return solve, ()
+    elif strategy == "gd":
+        def solver_factory():
+            return (lambda state, X, G: (-G, state)), ()
+    else:
+        raise ValueError(
+            f"strategy {strategy!r} is not available on the dense-mesh "
+            f"backend (have 'sd', 'fp', 'gd')")
+
+    obj = _DenseMeshObjective(mesh, eg, solver_factory, place)
+    return obj, place(X)
+
+
+def _sparse_spectral_init(cfg, saff, n: int) -> Array:
+    """Spectral init: dense eigendecomposition while affordable, block
+    power iteration on the ELL graph above that (sparse/linalg.py)."""
+    if n <= 2048:
+        A = to_dense(saff.graph)
+        return laplacian_eigenmaps(0.5 * (A + A.T), cfg.dim) * 0.1
+    return sparse_laplacian_eigenmaps(
+        saff.graph, saff.rev, d=cfg.dim, seed=cfg.seed) * 0.1
+
+
+def build_sparse_objective(cfg, mesh: Mesh | None = None,
+                           mspec: EmbedMeshSpec | None = None,
+                           Y: Array | None = None,
+                           X0: Array | None = None,
+                           strategy: str = "sd",
+                           sharded: bool = False):
+    """(objective, X) for the sparse neighbor-graph backend, O(N (k + m) d)
+    per iteration: ELL affinities, negative-sampled repulsion, matrix-free
+    direction solves.  `sharded=True` row-shards the graph over the mesh
+    (sparse/sharding.py).
+
+    Strategies: ``sd`` (Jacobi-PCG on B = 4 L(W+) + mu I, warm-started),
+    ``fp`` (the SAME system's Jacobi diagonal applied directly — B's exact
+    inverse restricted to its diagonal 4 D+ + mu, the paper's fixed-point
+    iteration over the sparse graph) and ``gd``.
+    """
+    normalized = is_normalized(cfg.kind)
+    n = Y.shape[0]
+    k = cfg.n_neighbors or min(int(3 * cfg.perplexity), n - 1)
+    if k < cfg.perplexity:
+        raise ValueError(
+            f"n_neighbors={k} < perplexity={cfg.perplexity}: the "
+            f"k-candidate entropy cannot reach log(perplexity), so the "
+            f"calibration would silently degenerate to uniform weights; "
+            f"use n_neighbors >= 3 * perplexity (or 0 for auto)")
+    if sharded:
+        if mesh is None:
+            raise ValueError("the sparse-sharded backend needs a mesh")
+        if mspec is None:
+            mspec = default_mesh_spec(mesh)
+        # fail fast on unusable mesh shapes, before the k-NN build
+        validate_sparse_mesh(mesh, mspec.row_axes)
+    lam = jnp.asarray(cfg.lam, jnp.float32)
+    saff = sparse_affinities(jnp.asarray(Y), k=k,
+                             perplexity=cfg.perplexity, model=cfg.kind,
+                             method=cfg.knn_method)
+    X = jnp.asarray(X0) if X0 is not None else _sparse_spectral_init(
+        cfg, saff, n)
+
+    if sharded:
+        sg = shard_sparse_affinities(mesh, mspec.row_axes, saff)
+        eg_l, e_l = make_sharded_energy_grad(
+            mesh, mspec.row_axes, sg, cfg.kind,
+            n_negatives=cfg.n_negatives, z_decay=cfg.z_ema_decay)
+        if normalized:
+            eg = lambda X, key, z: eg_l(X, lam, key, z)
         else:
-            # SparseSD's Laplacian system is model-independent (the paper
-            # freezes the attractive Hessian at X = 0, where every kernel's
-            # -K'(0) = 1), so normalized kinds reuse the same CG operator
-            matvec, inv_diag, _ = make_sd_operator(saff.graph, saff.rev,
-                                                   cfg.mu_scale)
+            eg = lambda X, key: eg_l(X, lam, key)
+        e_only = lambda X, key: e_l(X, lam, key)
+        matvec, inv_diag, _ = make_sharded_sd_operator(
+            mesh, mspec.row_axes, sg, saff, cfg.mu_scale)
+        place = lambda X: replicate(mesh, X)
+        X = place(X)
+    else:
+        # SparseSD's Laplacian system is model-independent (the paper
+        # freezes the attractive Hessian at X = 0, where every kernel's
+        # -K'(0) = 1), so normalized kinds reuse the same CG operator
+        matvec, inv_diag, _ = make_sd_operator(saff.graph, saff.rev,
+                                               cfg.mu_scale)
 
-            if normalized:
-                @jax.jit
-                def eg(X, key, z):
-                    return energy_and_grad_sparse(
-                        X, saff, cfg.kind, lam,
-                        n_negatives=cfg.n_negatives, key=key, z_prev=z,
-                        z_decay=cfg.z_ema_decay, return_state=True)
-            else:
-                @jax.jit
-                def eg(X, key):
-                    return energy_and_grad_sparse(
-                        X, saff, cfg.kind, lam,
-                        n_negatives=cfg.n_negatives, key=key)
-
+        if normalized:
             @jax.jit
-            def e_only(X, key):
-                # line-search trials need no gradient: ~half the work
+            def eg(X, key, z):
                 return energy_and_grad_sparse(
-                    X, saff, cfg.kind, lam, n_negatives=cfg.n_negatives,
-                    key=key, with_grad=False)[0]
+                    X, saff, cfg.kind, lam,
+                    n_negatives=cfg.n_negatives, key=key, z_prev=z,
+                    z_decay=cfg.z_ema_decay, return_state=True)
+        else:
+            @jax.jit
+            def eg(X, key):
+                return energy_and_grad_sparse(
+                    X, saff, cfg.kind, lam,
+                    n_negatives=cfg.n_negatives, key=key)
 
-            place = None
+        @jax.jit
+        def e_only(X, key):
+            # line-search trials need no gradient: ~half the work
+            return energy_and_grad_sparse(
+                X, saff, cfg.kind, lam, n_negatives=cfg.n_negatives,
+                key=key, with_grad=False)[0]
 
+        place = None
+
+    if strategy == "sd":
         @jax.jit
         def solve(G, P0):
             return pcg(matvec, -G, P0, inv_diag=inv_diag,
                        tol=cfg.cg_tol, maxiter=cfg.cg_maxiter).x
+    elif strategy == "fp":
+        solve = jax.jit(lambda G, P0: -inv_diag[:, None] * G)
+    elif strategy == "gd":
+        solve = jax.jit(lambda G, P0: -G)
+    else:
+        raise ValueError(
+            f"strategy {strategy!r} is not available on the sparse "
+            f"backends (have 'sd', 'fp', 'gd')")
 
-        obj_cls = _NormalizedSparseObjective if normalized \
-            else _SparseObjective
-        obj = obj_cls(eg, e_only, solve, X, place=place)
-        return _to_fit_result(fit_loop(obj, X, self._loop_cfg(), callback))
+    obj_cls = _NormalizedSparseObjective if normalized else _SparseObjective
+    return obj_cls(eg, e_only, solve, X, place=place), X
+
+
+class DistributedEmbedding:
+    """DEPRECATED: use `repro.api.Embedding` (pass the mesh to its
+    constructor).  Thin shim: converts the `EmbedConfig` to an `EmbedSpec`
+    and delegates `fit` to the estimator, so legacy call sites keep their
+    exact behavior (same builders, same engine, same results)."""
+
+    def __init__(self, cfg: EmbedConfig, mesh: Mesh,
+                 spec: EmbedMeshSpec | None = None):
+        warnings.warn(
+            "DistributedEmbedding is deprecated; use repro.api.Embedding "
+            "(EmbedSpec + mesh) instead",
+            DeprecationWarning, stacklevel=2)
+        self.cfg = cfg
+        self.mesh = mesh
+        self.spec = spec if spec is not None else default_mesh_spec(mesh)
+
+    def fit(self, Y: Array, X0: Array | None = None,
+            callback: Callable[[int, Array, float], None] | None = None
+            ) -> FitResult:
+        from repro.api import Embedding
+
+        est = Embedding(self.cfg.to_spec(self.mesh.devices.size),
+                        mesh=self.mesh, mesh_spec=self.spec)
+        est.fit(Y, X0=X0, callback=callback)
+        return to_fit_result(est.result_)

@@ -165,6 +165,36 @@ def knn_graph_approx(Y: Array, k: int, n_projections: int = 8,
     return d2.reshape(n_pad, k)[:n], idx.reshape(n_pad, k)[:n]
 
 
+def knn_cross(Yq: Array, Yr: Array, k: int, block_rows: int = 1024
+              ) -> tuple[Array, Array]:
+    """Exact blocked k-NN from QUERY rows to REFERENCE rows: (d2, indices),
+    both (n_q, k), indices into Yr.  No self-exclusion — the two sets are
+    distinct by construction (the out-of-sample transform's new points vs
+    the training set).  O(n_q * n_r * D) compute, O(block_rows * n_r)
+    memory, same blocking as `knn_graph_exact`."""
+    n_q, n_r = Yq.shape[0], Yr.shape[0]
+    if k > n_r:
+        raise ValueError(f"k={k} must be <= n_reference={n_r}")
+    if n_q == 0:
+        return (jnp.zeros((0, k), Yr.dtype),
+                jnp.zeros((0, k), jnp.int32))
+    r = jnp.sum(Yr * Yr, axis=-1)
+    br = min(block_rows, n_q)
+    n_pad = -(-n_q // br) * br
+    Yp = jnp.pad(Yq, ((0, n_pad - n_q), (0, 0)))
+
+    def one_block(row0):
+        Yb = jax.lax.dynamic_slice_in_dim(Yp, row0, br, axis=0)
+        d2 = jnp.maximum(
+            jnp.sum(Yb * Yb, axis=-1)[:, None] + r[None, :]
+            - 2.0 * (Yb @ Yr.T), 0.0)
+        neg, idx = jax.lax.top_k(-d2, k)
+        return -neg, idx.astype(jnp.int32)
+
+    d2, idx = jax.lax.map(one_block, jnp.arange(0, n_pad, br))
+    return d2.reshape(n_pad, k)[:n_q], idx.reshape(n_pad, k)[:n_q]
+
+
 def knn_graph(Y: Array, k: int, method: str = "auto", **kw) -> tuple[Array, Array]:
     """(d2, indices), both (N, k).  `method`: 'exact' | 'approx' | 'auto'
     (exact below N=20_000, approx above)."""

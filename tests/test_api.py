@@ -1,0 +1,323 @@
+"""The unified `repro.api` estimator surface: registry validation,
+strategy parity against the legacy drivers, backend auto-resolution,
+out-of-sample transform semantics, and the deprecation shims."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Embedding, EmbedSpec, available_backends, \
+    available_strategies, resolve_backend
+from repro.core import LSConfig, laplacian_eigenmaps, make_affinities
+from repro.core.strategies import DiagH, FP, GD, SD, SDMinus
+from repro.data import mnist_like
+from tests.conftest import three_loops
+
+
+@pytest.fixture(scope="module")
+def problem():
+    Y = three_loops(n_per=16, loops=2, dim=8)
+    aff = make_affinities(Y, 8.0, model="ee")
+    X0 = laplacian_eigenmaps(aff.Wp, 2) * 0.1
+    return Y, aff, X0
+
+
+# -- early validation (satellite: reject unknown names at construction) --------
+
+
+def test_spec_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="tsne"):
+        EmbedSpec(kind="nope")
+
+
+def test_spec_rejects_unknown_strategy_with_registry_names():
+    with pytest.raises(ValueError) as e:
+        EmbedSpec(strategy="newton")
+    for name in ("gd", "fp", "diag", "sd", "sd-"):
+        assert f"'{name}'" in str(e.value)
+
+
+def test_spec_rejects_unknown_backend_with_registry_names():
+    with pytest.raises(ValueError) as e:
+        EmbedSpec(backend="gpu")
+    for name in available_backends():
+        assert f"'{name}'" in str(e.value)
+
+
+def test_spec_rejects_incompatible_strategy_backend():
+    with pytest.raises(ValueError, match="not available on backend"):
+        EmbedSpec(strategy="sd-", backend="sparse")
+    # auto never errors at construction: it falls back to dense at resolve
+    EmbedSpec(strategy="sd-", backend="auto")
+
+
+def test_spec_strategy_aliases():
+    assert EmbedSpec(strategy="DiagH").strategy == "diag"
+    assert EmbedSpec(strategy="L-BFGS").strategy == "lbfgs"
+
+
+def test_embedconfig_rejects_unknown_names():
+    from repro.embed import EmbedConfig
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        with pytest.raises(ValueError, match="model families"):
+            EmbedConfig(kind="nope")
+        with pytest.raises(ValueError, match="registered strategies"):
+            EmbedConfig(strategy="newton")
+
+
+def test_auto_backend_resolution():
+    assert resolve_backend("auto", n=500, n_devices=1, strategy="sd") \
+        == "dense"
+    assert resolve_backend("auto", n=512, n_devices=8, strategy="sd") \
+        == "dense-mesh"
+    # dense-mesh shards (N, N) without padding: indivisible N stays dense
+    assert resolve_backend("auto", n=500, n_devices=8, strategy="sd") \
+        == "dense"
+    assert resolve_backend("auto", n=50_000, n_devices=1, strategy="sd") \
+        == "sparse"
+    assert resolve_backend("auto", n=50_000, n_devices=8, strategy="sd") \
+        == "sparse-sharded"
+    # dense-only strategies fall back to the dense backend at any scale
+    assert resolve_backend("auto", n=50_000, n_devices=8, strategy="sd-") \
+        == "dense"
+    assert available_strategies() == sorted(available_strategies())
+
+
+# -- strategy-registry parity (satellite) ---------------------------------------
+
+
+@pytest.mark.parametrize("name,legacy", [
+    ("gd", GD()),
+    ("fp", FP()),
+    ("diag", DiagH()),
+    ("sd", SD()),
+    ("sd-", SDMinus()),
+])
+def test_dense_strategy_parity_bit_for_bit(problem, name, legacy):
+    """Every registered partial-Hessian strategy through repro.api matches
+    the legacy core.minimize trajectory bit-for-bit."""
+    _, aff, X0 = problem
+    ls = LSConfig(init_step="adaptive_grow" if name.startswith("sd")
+                  else "one")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro.core import minimize
+        ref = minimize(X0, aff, "ee", 50.0, legacy, max_iters=10,
+                       tol=1e-6, ls_cfg=ls)
+    emb = Embedding(EmbedSpec(kind="ee", lam=50.0, strategy=name,
+                              backend="dense", max_iters=10, tol=1e-6,
+                              ls=ls))
+    emb.fit(None, X0=X0, aff=aff)
+    res = emb.result_
+    np.testing.assert_array_equal(np.asarray(ref.X),
+                                  np.asarray(emb.embedding_))
+    assert list(ref.energies) == list(res.energies)
+    assert list(ref.step_sizes) == list(res.step_sizes)
+    assert list(ref.n_fevals) == list(res.n_fevals)
+
+
+@pytest.fixture(scope="module")
+def sparse_spec():
+    return EmbedSpec(kind="ee", lam=50.0, strategy="sd", backend="sparse",
+                     perplexity=8.0, max_iters=8, tol=0.0,
+                     n_neighbors=24, n_negatives=8)
+
+
+def test_sparse_backend_matches_legacy_trainer(problem, sparse_spec):
+    """repro.api's sparse backend IS the legacy EmbedConfig(sparse=True)
+    path — identical trajectories (same builders, engine, seeds)."""
+    Y, _, _ = problem
+    api = Embedding(sparse_spec).fit(Y)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro.embed import DistributedEmbedding, EmbedConfig
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        cfg = EmbedConfig(kind="ee", lam=50.0, perplexity=8.0, max_iters=8,
+                          tol=0.0, sparse=True, n_neighbors=24,
+                          n_negatives=8)
+        legacy = DistributedEmbedding(cfg, mesh).fit(Y)
+    np.testing.assert_array_equal(np.asarray(legacy.X),
+                                  np.asarray(api.embedding_))
+    np.testing.assert_array_equal(legacy.energies, api.result_.energies)
+
+
+@pytest.mark.parametrize("strategy", ["fp", "gd"])
+def test_diagonal_strategies_on_sparse_backend(problem, sparse_spec,
+                                               strategy):
+    """The registry's diagonal degenerations run on the sparse backend and
+    decrease energy (fp is the paper's fixed-point iteration realized from
+    the Jacobi diagonal of the sparse SD system)."""
+    Y, _, _ = problem
+    res = Embedding(sparse_spec.replace(strategy=strategy)).fit(Y).result_
+    assert np.all(np.isfinite(res.energies))
+    assert res.energies[-1] < res.energies[0]
+
+
+def test_sharded_backend_parity(problem, sparse_spec):
+    """sd on the sparse-sharded backend tracks the single-device sparse
+    backend within the existing parity pins (per-application <= 1e-5;
+    trajectories to accumulated-fp rtol).  Runs on however many devices
+    are visible — 8 in the multi-device CI job."""
+    Y, _, _ = problem
+    ndev = jax.device_count()
+    from repro.launch.mesh import axis_types_kwargs
+    mesh = jax.make_mesh((ndev, 1), ("data", "model"),
+                         **axis_types_kwargs(2))
+    r_sp = Embedding(sparse_spec).fit(Y).result_
+    r_sh = Embedding(sparse_spec.replace(backend="sparse-sharded"),
+                     mesh=mesh).fit(Y).result_
+    np.testing.assert_allclose(r_sh.energies, r_sp.energies, rtol=5e-3)
+    # the sharded normalized path (streaming-Z psum) stays in lockstep too
+    t_sp = Embedding(sparse_spec.replace(kind="tsne", lam=1.0)).fit(Y)
+    t_sh = Embedding(sparse_spec.replace(kind="tsne", lam=1.0,
+                                         backend="sparse-sharded"),
+                     mesh=mesh).fit(Y)
+    np.testing.assert_allclose(t_sh.result_.energies, t_sp.result_.energies,
+                               rtol=5e-3)
+
+
+def test_dense_mesh_backend_strategies(problem):
+    Y, _, _ = problem
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    energies = {}
+    for strategy in ("sd", "fp", "gd"):
+        res = Embedding(EmbedSpec(kind="ee", lam=50.0, strategy=strategy,
+                                  backend="dense-mesh", perplexity=8.0,
+                                  max_iters=6, tol=0.0),
+                        mesh=mesh).fit(Y).result_
+        assert res.energies[-1] < res.energies[0]
+        energies[strategy] = res.energies[-1]
+    # distinct directions actually ran (not one solver under three names)
+    assert len({round(float(e), 3) for e in energies.values()}) == 3
+
+
+# -- estimator surface ----------------------------------------------------------
+
+
+def test_fit_transform_and_resume(tmp_path, problem):
+    Y, _, _ = problem
+    spec = EmbedSpec(kind="ee", lam=50.0, strategy="sd", backend="dense",
+                     perplexity=8.0, max_iters=12, tol=0.0,
+                     checkpoint_dir=str(tmp_path / "ck"),
+                     checkpoint_every=100)
+    full = Embedding(spec.replace(checkpoint_dir=None))
+    X_full = full.fit_transform(Y)
+
+    # interrupted at 6, resumed to 12: bit-identical trajectory
+    part = Embedding(spec.replace(max_iters=6)).fit(Y)
+    resumed = Embedding(spec).resume(Y)
+    assert resumed.result_.resumed_from == 6
+    np.testing.assert_array_equal(np.asarray(X_full),
+                                  np.asarray(resumed.embedding_))
+    np.testing.assert_array_equal(full.result_.energies[7:],
+                                  resumed.result_.energies[1:])
+    assert part.result_.n_iters == 6
+
+
+def test_transform_leaves_training_embedding_bit_identical():
+    Y, labels = mnist_like(n=240)
+    emb = Embedding(EmbedSpec(kind="tsne", lam=1.0, strategy="sd",
+                              backend="dense", perplexity=10.0,
+                              max_iters=30, tol=0.0))
+    emb.fit(jnp.asarray(Y[:200]))
+    before = np.asarray(emb.embedding_).copy()
+    X_new = emb.transform(jnp.asarray(Y[200:]), max_iters=15)
+    assert X_new.shape == (40, 2)
+    assert np.all(np.isfinite(np.asarray(X_new)))
+    np.testing.assert_array_equal(before, np.asarray(emb.embedding_))
+    # and the fit result object was not touched either (no re-fit)
+    assert emb.result_.n_iters == 30
+
+
+def test_transform_places_heldout_mnist_near_own_class():
+    """Acceptance: held-out MNIST digits land nearer their own class's
+    training centroid than any other class's for >= 80% of points."""
+    Y, labels = mnist_like(n=480)
+    n_tr = 400
+    l_tr, l_te = labels[:n_tr], labels[n_tr:]
+    emb = Embedding(EmbedSpec(kind="tsne", lam=1.0, strategy="sd",
+                              backend="dense", perplexity=15.0,
+                              max_iters=60, tol=0.0))
+    emb.fit(jnp.asarray(Y[:n_tr]))
+    X = np.asarray(emb.embedding_)
+    X_new = np.asarray(emb.transform(jnp.asarray(Y[n_tr:]), max_iters=40))
+    cents = np.stack([X[l_tr == c].mean(0) for c in range(10)])
+    d = ((X_new[:, None, :] - cents[None]) ** 2).sum(-1)
+    acc = float((d.argmin(1) == l_te).mean())
+    assert acc >= 0.8, acc
+
+
+def test_transform_exhaustive_is_deterministic():
+    """n_negatives=None (or >= N) runs the anchored repulsion over EVERY
+    training anchor: the objective is deterministic (no PRNG keys, raw
+    convergence) and two transforms agree exactly."""
+    from repro.api import TransformObjective
+
+    Y, _ = mnist_like(n=130)
+    emb = Embedding(EmbedSpec(kind="ee", lam=10.0, strategy="sd",
+                              backend="dense", perplexity=8.0,
+                              max_iters=15, tol=0.0))
+    emb.fit(jnp.asarray(Y[:100]))
+    a = emb.transform(jnp.asarray(Y[100:]), max_iters=10, n_negatives=None)
+    b = emb.transform(jnp.asarray(Y[100:]), max_iters=10, n_negatives=None)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # None really selects the exhaustive mode (not the spec's 50-sample
+    # default): the objective must come out deterministic
+    anchors = jnp.asarray(emb.embedding_)
+    obj = TransformObjective("ee", 10.0, anchors,
+                             jnp.zeros((3, 4), jnp.int32),
+                             jnp.full((3, 4), 0.25), None)
+    assert obj.stochastic is False
+    assert TransformObjective("ee", 10.0, anchors,
+                              jnp.zeros((3, 4), jnp.int32),
+                              jnp.full((3, 4), 0.25), 5).stochastic is True
+
+
+def test_transform_empty_batch():
+    """A zero-row serving batch returns a (0, dim) embedding, not a crash."""
+    Y, _ = mnist_like(n=100)
+    emb = Embedding(EmbedSpec(kind="ee", lam=10.0, strategy="sd",
+                              backend="dense", perplexity=8.0,
+                              max_iters=5, tol=0.0))
+    emb.fit(jnp.asarray(Y))
+    out = emb.transform(jnp.zeros((0, Y.shape[1])))
+    assert np.asarray(out).shape == (0, 2)
+
+
+def test_auto_backend_with_precomputed_aff_stays_dense(problem):
+    """aff= is consumable only by the dense backend; auto must not route a
+    large-N precomputed-affinity fit into the sparse path's rejection."""
+    _, aff, X0 = problem
+    emb = Embedding(EmbedSpec(kind="ee", lam=50.0, max_iters=3, tol=0.0))
+    emb.fit(None, X0=X0, aff=aff)
+    assert emb.backend_ == "dense"
+
+
+# -- deprecation shims (satellite) ----------------------------------------------
+
+
+def test_minimize_shim_warns(problem):
+    _, aff, X0 = problem
+    from repro.core import SD as CoreSD, minimize
+    with pytest.warns(DeprecationWarning, match="repro.api.Embedding"):
+        minimize(X0, aff, "ee", 50.0, CoreSD(), max_iters=1, tol=0.0)
+
+
+def test_embedconfig_shim_warns():
+    from repro.embed import EmbedConfig
+    with pytest.warns(DeprecationWarning, match="EmbedSpec"):
+        EmbedConfig(kind="ee")
+
+
+def test_distributed_embedding_shim_warns():
+    from repro.embed import DistributedEmbedding, EmbedConfig
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        cfg = EmbedConfig(kind="ee")
+    with pytest.warns(DeprecationWarning, match="repro.api.Embedding"):
+        DistributedEmbedding(cfg, mesh)

@@ -306,17 +306,16 @@ def test_sparse_eigenmaps_matches_dense():
 
 
 def test_sparse_init_routes_to_power_iteration_above_cutoff():
-    """Above N = 2048 the trainer's sparse init is the ELL power iteration,
-    not the former random fallback."""
-    from repro.embed.trainer import DistributedEmbedding, EmbedConfig
+    """Above N = 2048 the sparse builders' spectral init is the ELL power
+    iteration, not the former random fallback."""
+    from repro.api import EmbedSpec
+    from repro.embed.trainer import _sparse_spectral_init
 
     n = 2100
     Y = jax.random.normal(jax.random.PRNGKey(0), (n, 4))
     saff = sparse_affinities(Y, k=12, perplexity=4.0, model="ee")
-    mesh = jax.make_mesh((1, 1), ("data", "model"))
-    emb = DistributedEmbedding(EmbedConfig(sparse=True, perplexity=4.0,
-                                           n_neighbors=12), mesh)
-    X0 = emb._sparse_init(saff, n)
+    X0 = _sparse_spectral_init(EmbedSpec(perplexity=4.0, n_neighbors=12),
+                               saff, n)
     want = sparse_laplacian_eigenmaps(saff.graph, saff.rev, d=2, seed=0) * 0.1
     np.testing.assert_array_equal(np.asarray(X0), np.asarray(want))
 
