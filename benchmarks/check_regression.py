@@ -17,6 +17,22 @@ per device count) are compared per count.
 The threshold can also come from the BENCH_REGRESSION_THRESHOLD env var
 (the CLI flag wins), so a one-off noisy runner can be waved through
 without editing the workflow.
+
+Telemetry gate (`--telemetry-baseline results/telemetry.json`): the
+bench's "telemetry" section (benchmarks/telemetry_smoke.py) carries, per
+model, the mean PCG iteration count of the instrumented sparse-SD fit
+and the measured telemetry on/off per-iteration overhead ratio.  The
+gate additionally fails when
+
+  * a model's `mean_pcg_iters` exceeds threshold x its committed
+    baseline (a conditioning regression: the spectral-direction system
+    suddenly needs more CG work per iteration — invisible in `iter_s`
+    noise at smoke scale), or
+  * any `overhead_ratio` exceeds the TELEMETRY_OVERHEAD_THRESHOLD env
+    var (default 1.05 — the obs subsystem's "provably cheap" budget).
+
+A missing telemetry section or baseline file only warns: telemetry gates
+must be able to land before their baseline exists.
 """
 from __future__ import annotations
 
@@ -67,6 +83,53 @@ def compare(bench: dict, baseline: dict, threshold: float):
     return rows, regressions
 
 
+def check_telemetry(bench: dict, baseline_path: str | None,
+                    threshold: float, overhead_threshold: float) -> int:
+    """Solver-health + overhead gate over the bench's "telemetry" section.
+    Returns the number of failures; missing data only warns (gates must be
+    able to land before their baseline exists)."""
+    tel = bench.get("telemetry")
+    if not isinstance(tel, dict) or not tel:
+        print("telemetry-gate: WARNING — bench has no telemetry section; "
+              "skipped")
+        return 0
+    base = {}
+    if baseline_path:
+        try:
+            with open(baseline_path) as f:
+                base = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"telemetry-gate: WARNING — no usable baseline at "
+                  f"{baseline_path} ({e}); PCG comparison skipped")
+    failures = 0
+    print(f"{'model':8s} {'metric':>16s} {'base':>10s} {'new':>10s} "
+          f"{'ratio':>7s}  status")
+    for model, row in sorted(tel.items()):
+        if not isinstance(row, dict):
+            continue
+        v = row.get("mean_pcg_iters")
+        b = base.get(model, {}).get("mean_pcg_iters") \
+            if isinstance(base.get(model), dict) else None
+        if v is not None:
+            if b is not None:
+                ratio = float(v) / max(float(b), 1e-12)
+                status = "REGRESSION" if ratio > threshold else "ok"
+                failures += status == "REGRESSION"
+                print(f"{model:8s} {'mean_pcg_iters':>16s} {b:>10.2f} "
+                      f"{v:>10.2f} {ratio:>7.2f}  {status}")
+            else:
+                print(f"{model:8s} {'mean_pcg_iters':>16s} {'-':>10s} "
+                      f"{v:>10.2f} {'-':>7s}  no-baseline")
+        ov = row.get("overhead_ratio")
+        if ov is not None:
+            status = "FAIL" if float(ov) > overhead_threshold else "ok"
+            failures += status == "FAIL"
+            print(f"{model:8s} {'overhead_ratio':>16s} "
+                  f"{overhead_threshold:>10.2f} {float(ov):>10.3f} "
+                  f"{'-':>7s}  {status}")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--bench", default="BENCH_smoke.json")
@@ -74,6 +137,14 @@ def main() -> int:
     ap.add_argument("--threshold", type=float,
                     default=float(os.environ.get(
                         "BENCH_REGRESSION_THRESHOLD", 1.5)))
+    ap.add_argument("--telemetry-baseline", default=None,
+                    help="committed results/telemetry.json to diff the "
+                         "bench's telemetry section (mean PCG iters per "
+                         "model) against; omitting it skips the PCG "
+                         "comparison but still enforces the overhead gate")
+    ap.add_argument("--overhead-threshold", type=float,
+                    default=float(os.environ.get(
+                        "TELEMETRY_OVERHEAD_THRESHOLD", 1.05)))
     a = ap.parse_args()
 
     with open(a.bench) as f:
@@ -94,17 +165,24 @@ def main() -> int:
         print(f"{model:8s} {n:>8s} {col:>14s} {fb:>10s} {fv:>10s} "
               f"{fr:>7s}  {status}")
 
+    tel_failures = check_telemetry(bench, a.telemetry_baseline,
+                                   a.threshold, a.overhead_threshold)
+
     compared = [r for r in rows if r[3] is not None]
     if not compared:
         print("bench-regression: WARNING — no comparable (model, n, column) "
               "pairs between bench and baseline; gate is vacuous")
-        return 0
     if regressions:
         print(f"bench-regression: FAIL — {len(regressions)} timing(s) "
               f"regressed more than {a.threshold:.2f}x")
+    if tel_failures:
+        print(f"telemetry-gate: FAIL — {tel_failures} telemetry check(s) "
+              f"out of budget")
+    if regressions or tel_failures:
         return 1
-    print(f"bench-regression: OK — {len(compared)} timing(s) within "
-          f"{a.threshold:.2f}x of baseline")
+    if compared:
+        print(f"bench-regression: OK — {len(compared)} timing(s) within "
+              f"{a.threshold:.2f}x of baseline")
     return 0
 
 

@@ -17,7 +17,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import (fig1_learning_curves, fig2_random_inits,
                         fig3_homotopy, fig4_large, fig5_sparse_scaling,
-                        sd_overhead)
+                        sd_overhead, telemetry_smoke)
 
 
 def main() -> None:
@@ -44,9 +44,14 @@ def main() -> None:
                                        perplexity=3.0, dense_cutoff=512,
                                        models=("ee", "tsne"),
                                        out_json="results/fig5.json")
+        # instrumented sparse-SD fits: writes results/telemetry/{model}_sd/
+        # run.jsonl + trace.json (uploaded as CI artifacts) and the solver
+        # health + overhead numbers the regression gate checks
+        res_tel = telemetry_smoke.run(n=2048, iters=12, perplexity=3.0,
+                                      out_dir="results/telemetry")
         import jax
         with open(a.bench_out, "w") as f:
-            json.dump({"fig5": res5,
+            json.dump({"fig5": res5, "telemetry": res_tel,
                        "meta": {"jax": jax.__version__,
                                 "devices": len(jax.devices()),
                                 "unix_time": time.time()}}, f)

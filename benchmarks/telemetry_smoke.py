@@ -1,0 +1,144 @@
+"""Telemetry smoke bench: instrumented sparse-SD fits + overhead gate data.
+
+Two jobs, both CI-facing:
+
+  * **artifacts** — per model, one sparse `sd` fit with full telemetry
+    writing `results/telemetry/{model}_sd/run.jsonl` + `trace.json`
+    (uploaded by the bench-regression workflow, loadable in Perfetto /
+    `chrome://tracing`), and its summary's `mean_pcg_iters` /
+    `mean_pcg_residual` — the solver-health numbers the regression gate
+    diffs against the committed `results/telemetry.json` baseline (a PCG
+    suddenly needing 2x the iterations is a conditioning regression that
+    `iter_s` alone hides inside noise).
+  * **overhead** — warm re-runs of the already-compiled sparse-SD fit
+    loop from a shared objective and X0, telemetry off and on
+    alternating; each rep contributes one paired on/off ratio and
+    `overhead_ratio` is the median over reps (see `overhead_point`).
+    The ratio feeds the gate's <=1.05 check — the "provably cheap"
+    acceptance of the obs subsystem.
+
+    PYTHONPATH=src python -m benchmarks.telemetry_smoke [--n 2048]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import Embedding, EmbedSpec
+from repro.data import mnist_like
+from repro.obs import Telemetry
+
+from .common import csv_row
+
+_DEFAULT_LAM = {"ssne": 1.0, "tsne": 1.0}
+
+
+def _spec(kind: str, iters: int, perplexity: float) -> EmbedSpec:
+    return EmbedSpec(kind=kind, strategy="sd", backend="sparse",
+                     lam=_DEFAULT_LAM.get(kind, 100.0), max_iters=iters,
+                     tol=0.0, perplexity=perplexity)
+
+
+def _iter_times(res) -> np.ndarray:
+    """Per-iteration wall-clock with the compile-heavy first step dropped."""
+    return np.diff(np.asarray(res.times))[1:]
+
+
+def instrumented_fit(kind: str, Y, iters: int, perplexity: float,
+                     out_dir: str) -> dict:
+    """One fully-telemetered fit; writes run.jsonl + trace.json under
+    `out_dir` and returns the summary's solver-health aggregates."""
+    emb = Embedding(_spec(kind, iters, perplexity))
+    emb.fit(Y, telemetry=out_dir)
+    s = emb.telemetry_.summary()
+    return {k: s[k] for k in ("mean_pcg_iters", "mean_pcg_residual",
+                              "final_energy", "n_iters") if k in s}
+
+
+def overhead_point(kind: str, Y, iters: int, perplexity: float,
+                   reps: int = 10) -> dict:
+    """Telemetry on/off per-iteration overhead of the sparse-SD fit loop.
+
+    The objective (graph, jitted energy/solve closures) is built ONCE and
+    the already-compiled `fit_loop` is re-run from the same X0, telemetry
+    off and on alternating — so the two arms execute the identical device
+    program and differ only in the engine's per-iteration host work, which
+    is exactly where telemetry lives.  Warm re-runs take the graph build
+    and jit compile (tens of times the fit itself, and the dominant noise
+    source when timing whole `Embedding.fit` calls) out of the measurement.
+
+    Estimator: each rep contributes one PAIRED on/off ratio (median
+    per-iteration time within each run, first iteration dropped);
+    `overhead_ratio` is the median of the paired ratios.  Pairing cancels
+    machine drift, the median discards the odd scheduler-hit rep."""
+    from repro.embed.engine import fit_loop
+    from repro.embed.trainer import build_sparse_objective, make_loop_config
+
+    spec = _spec(kind, iters, perplexity)
+    obj, X0 = build_sparse_objective(spec, None, None, Y, None,
+                                     strategy=spec.strategy, sharded=False)
+    cfg = make_loop_config(spec, spec.resolved_ls())
+    fit_loop(obj, X0, cfg)                        # warmup: compile once
+    off, on, ratios = [], [], []
+    for _ in range(reps):
+        r0 = fit_loop(obj, X0, cfg)
+        t0 = float(np.median(_iter_times(r0)))
+        r1 = fit_loop(obj, X0, cfg, telemetry=Telemetry())
+        t1 = float(np.median(_iter_times(r1)))
+        off.append(t0)
+        on.append(t1)
+        ratios.append(t1 / max(t0, 1e-12))
+    return {"iter_s_off": min(off), "iter_s_on": min(on),
+            "overhead_ratio": float(np.median(ratios))}
+
+
+def run(n=2048, models=("ee", "tsne"), iters=20, perplexity=10.0, dim=32,
+        reps=10, out_dir="results/telemetry", out_json=None) -> dict:
+    """Returns {model: {mean_pcg_iters, ..., overhead_ratio, ...}} and
+    writes per-model run.jsonl/trace.json artifact directories."""
+    Y, _ = mnist_like(n=n, dim=dim)
+    Y = jnp.asarray(Y)
+    results = {}
+    for kind in models:
+        art_dir = os.path.join(out_dir, f"{kind}_sd")
+        row = instrumented_fit(kind, Y, iters, perplexity, art_dir)
+        row.update(overhead_point(kind, Y, iters, perplexity, reps=reps))
+        row["artifacts"] = art_dir
+        csv_row("telemetry", kind, n,
+                f"{row['mean_pcg_iters']:.1f}",
+                f"{row['iter_s_off']:.4f}", f"{row['iter_s_on']:.4f}",
+                f"{row['overhead_ratio']:.3f}")
+        results[kind] = row
+    if out_json:
+        if os.path.dirname(out_json):
+            os.makedirs(os.path.dirname(out_json), exist_ok=True)
+        with open(out_json, "w") as f:
+            json.dump(results, f, indent=1)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=2048)
+    ap.add_argument("--model", default="ee,tsne")
+    ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--perplexity", type=float, default=10.0)
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--reps", type=int, default=10)
+    ap.add_argument("--out-dir", default="results/telemetry")
+    ap.add_argument("--out", default=None,
+                    help="also dump the summary dict as JSON (the shape "
+                         "committed as results/telemetry.json)")
+    a = ap.parse_args()
+    run(n=a.n, models=tuple(a.model.split(",")), iters=a.iters,
+        perplexity=a.perplexity, dim=a.dim, reps=a.reps, out_dir=a.out_dir,
+        out_json=a.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -51,9 +51,11 @@ def main():
                      tol=1e-8, strategy_opts=opts,
                      checkpoint_dir=a.ckpt, checkpoint_every=50)
 
-    def cb(it, X, e):
+    def cb(it, X, e, diag):
         if it % 25 == 0:
-            print(f"  iter {it}: E = {e:.4f}")
+            pcg = (f", pcg {diag['pcg_iters']:.0f}"
+                   if diag and "pcg_iters" in diag else "")
+            print(f"  iter {it}: E = {e:.4f}{pcg}")
 
     emb = Embedding(spec)
     emb.fit(jnp.asarray(Y_fit), callback=cb)

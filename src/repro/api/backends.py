@@ -1,13 +1,20 @@
 """Backend implementations for the `repro.api` registry.
 
 Each backend is a function `fit(spec, Y, *, X0, aff, mesh, mesh_spec,
-callback) -> EngineResult` composing an `Objective` (core/minimize.py or
-embed/trainer.py builders) with the unified engine (`embed.engine.
-fit_loop`).  The dense backend is the exact glue `core.minimize.minimize`
-has always run — `repro.api` trajectories are bit-identical to the legacy
-driver (pinned in tests/test_api.py).
+callback, telemetry) -> EngineResult` composing an `Objective`
+(core/minimize.py or embed/trainer.py builders) with the unified engine
+(`embed.engine.fit_loop`).  The dense backend is the exact glue
+`core.minimize.minimize` has always run — `repro.api` trajectories are
+bit-identical to the legacy driver (pinned in tests/test_api.py).
+
+Telemetry: each backend activates `telemetry.tracer` around *both* the
+objective build (so graph-build / spectral-init spans land in the trace)
+and the fit loop, then hands the `Telemetry` on to `fit_loop` which wires
+its `RunRecorder` into the iteration stream.
 """
 from __future__ import annotations
+
+import contextlib
 
 import jax.numpy as jnp
 
@@ -16,67 +23,83 @@ from repro.core.minimize import DenseObjective
 from repro.embed.engine import fit_loop
 from repro.embed.trainer import (build_dense_mesh_objective,
                                  build_sparse_objective, make_loop_config)
+from repro.obs import activate, span
 
 from .registries import attach_backend_impl, strategy_entry
+
+
+def _tracing(telemetry):
+    if telemetry is None:
+        return contextlib.nullcontext()
+    return activate(telemetry.tracer)
 
 
 def _dense_problem(spec, Y, X0, aff):
     if aff is None:
         if Y is None:
             raise ValueError("fit needs Y (or a precomputed aff=)")
-        aff = make_affinities(jnp.asarray(Y), spec.perplexity,
-                              model=spec.kind)
+        with span("graph-build", phase=True, dense=True):
+            aff = make_affinities(jnp.asarray(Y), spec.perplexity,
+                                  model=spec.kind)
     if X0 is None:
-        X0 = laplacian_eigenmaps(aff.Wp, spec.dim) * 0.1
+        with span("spectral-init", phase=True):
+            X0 = laplacian_eigenmaps(aff.Wp, spec.dim) * 0.1
     return aff, jnp.asarray(X0)
 
 
 def fit_dense(spec, Y, *, X0=None, aff=None, mesh=None, mesh_spec=None,
-              callback=None):
+              callback=None, telemetry=None):
     """Single-device dense backend: full affinities, any registered
     strategy, the whole iteration fused into one jitted XLA program
     (`core/minimize.DenseObjective`)."""
-    aff, X0 = _dense_problem(spec, Y, X0, aff)
-    strategy = strategy_entry(spec.strategy).dense_factory(
-        spec, **dict(spec.strategy_opts))
-    ls = spec.resolved_ls()
-    lam = jnp.asarray(spec.lam, dtype=X0.dtype)
-    obj = DenseObjective(aff, spec.kind, lam, strategy, ls, X0)
-    return fit_loop(obj, X0, make_loop_config(spec, ls), callback)
+    with _tracing(telemetry):
+        aff, X0 = _dense_problem(spec, Y, X0, aff)
+        strategy = strategy_entry(spec.strategy).dense_factory(
+            spec, **dict(spec.strategy_opts))
+        ls = spec.resolved_ls()
+        lam = jnp.asarray(spec.lam, dtype=X0.dtype)
+        obj = DenseObjective(aff, spec.kind, lam, strategy, ls, X0)
+        return fit_loop(obj, X0, make_loop_config(spec, ls), callback,
+                        telemetry=telemetry)
 
 
 def fit_dense_mesh(spec, Y, *, X0=None, aff=None, mesh=None, mesh_spec=None,
-                   callback=None):
+                   callback=None, telemetry=None):
     if aff is not None:
         raise ValueError("precomputed aff= is dense-backend-only (the mesh "
                          "backend shards its own affinities)")
-    obj, X = build_dense_mesh_objective(spec, mesh, mesh_spec, Y, X0,
-                                        strategy=spec.strategy)
-    return fit_loop(obj, X, make_loop_config(spec, spec.resolved_ls()),
-                    callback)
+    with _tracing(telemetry):
+        obj, X = build_dense_mesh_objective(spec, mesh, mesh_spec, Y, X0,
+                                            strategy=spec.strategy)
+        return fit_loop(obj, X, make_loop_config(spec, spec.resolved_ls()),
+                        callback, telemetry=telemetry)
 
 
-def _fit_sparse(spec, Y, X0, mesh, mesh_spec, callback, sharded):
-    obj, X = build_sparse_objective(spec, mesh, mesh_spec, Y, X0,
-                                    strategy=spec.strategy, sharded=sharded)
-    return fit_loop(obj, X, make_loop_config(spec, spec.resolved_ls()),
-                    callback)
+def _fit_sparse(spec, Y, X0, mesh, mesh_spec, callback, telemetry, sharded):
+    with _tracing(telemetry):
+        obj, X = build_sparse_objective(spec, mesh, mesh_spec, Y, X0,
+                                        strategy=spec.strategy,
+                                        sharded=sharded)
+        return fit_loop(obj, X, make_loop_config(spec, spec.resolved_ls()),
+                        callback, telemetry=telemetry)
 
 
 def fit_sparse(spec, Y, *, X0=None, aff=None, mesh=None, mesh_spec=None,
-               callback=None):
+               callback=None, telemetry=None):
     if aff is not None:
         raise ValueError("precomputed aff= is dense-backend-only (the "
                          "sparse backend builds its own ELL graph)")
-    return _fit_sparse(spec, Y, X0, mesh, mesh_spec, callback, sharded=False)
+    return _fit_sparse(spec, Y, X0, mesh, mesh_spec, callback, telemetry,
+                       sharded=False)
 
 
 def fit_sparse_sharded(spec, Y, *, X0=None, aff=None, mesh=None,
-                       mesh_spec=None, callback=None):
+                       mesh_spec=None, callback=None, telemetry=None):
     if aff is not None:
         raise ValueError("precomputed aff= is dense-backend-only (the "
                          "sparse backend builds its own ELL graph)")
-    return _fit_sparse(spec, Y, X0, mesh, mesh_spec, callback, sharded=True)
+    return _fit_sparse(spec, Y, X0, mesh, mesh_spec, callback, telemetry,
+                       sharded=True)
 
 
 attach_backend_impl("dense", fit_dense)

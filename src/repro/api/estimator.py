@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.embed.engine import EngineResult
+from repro.obs import resolve_telemetry
 
 from . import registries
 from .spec import EmbedSpec
@@ -77,11 +78,19 @@ class Embedding:
 
     def fit(self, Y: Array | None, X0: Array | None = None,
             aff=None,
-            callback: Callable[[int, Array, float], None] | None = None
-            ) -> "Embedding":
+            callback: Callable[..., None] | None = None,
+            *, telemetry=None) -> "Embedding":
         """Fit the embedding.  `Y` is the (N, D) data; the dense backend
         alternatively accepts precomputed `aff=` (core.Affinities) so
-        benchmark drivers can share one calibration across strategies."""
+        benchmark drivers can share one calibration across strategies.
+
+        `telemetry` switches on run observability (`repro.obs`): pass
+        `True` for in-memory recording, a directory path to also write
+        `run.jsonl` + `trace.json` there, or a `repro.obs.Telemetry` for
+        full control.  After the fit, `self.telemetry_` holds the
+        finalized object (`.summary()`, `.recorder.records`, …) and
+        `result_.diagnostics` the per-iteration dict table."""
+        tel = resolve_telemetry(telemetry)
         n = Y.shape[0] if Y is not None else aff.Wp.shape[0]
         if aff is not None and self.spec.backend == "auto":
             # precomputed dense affinities pin the backend: only the dense
@@ -91,24 +100,36 @@ class Embedding:
             backend = self._resolve_backend(n)
         registries.validate_strategy_backend(self.spec.strategy, backend)
         fit_fn = registries.backend_impl(backend)
-        res: EngineResult = fit_fn(
-            self.spec, Y, X0=X0, aff=aff, mesh=self._mesh_for(backend),
-            mesh_spec=self.mesh_spec, callback=callback)
+        if tel is not None:
+            tel.recorder.set_meta(backend=backend, kind=self.spec.kind,
+                                  strategy=self.spec.strategy, n=int(n))
+        try:
+            res: EngineResult = fit_fn(
+                self.spec, Y, X0=X0, aff=aff, mesh=self._mesh_for(backend),
+                mesh_spec=self.mesh_spec, callback=callback, telemetry=tel)
+        finally:
+            if tel is not None:
+                tel.finalize()
         self.backend_ = backend
         self.result_ = res
         self.embedding_ = res.X
+        self.telemetry_ = tel
         self._Y_train = Y
         return self
 
     def fit_transform(self, Y: Array, X0: Array | None = None,
-                      callback=None) -> Array:
-        return self.fit(Y, X0=X0, callback=callback).embedding_
+                      callback=None, *, telemetry=None) -> Array:
+        return self.fit(Y, X0=X0, callback=callback,
+                        telemetry=telemetry).embedding_
 
-    def resume(self, Y: Array | None = None, max_iters: int | None = None
-               ) -> "Embedding":
+    def resume(self, Y: Array | None = None, max_iters: int | None = None,
+               *, telemetry=None) -> "Embedding":
         """Continue a checkpointed fit (bit-identical to the uninterrupted
         trajectory — the engine's payload carries line-search and solver
-        state).  `max_iters` extends the iteration budget."""
+        state).  `max_iters` extends the iteration budget.  Passing the
+        same `telemetry` directory as the original fit appends to its
+        `run.jsonl`, giving one contiguous iteration record across the
+        checkpoint boundary."""
         if self.spec.checkpoint_dir is None:
             raise ValueError("resume() needs spec.checkpoint_dir")
         if Y is None:
@@ -118,7 +139,7 @@ class Embedding:
                                  "process to take it from)")
         if max_iters is not None:
             self.spec = dataclasses.replace(self.spec, max_iters=max_iters)
-        return self.fit(Y)
+        return self.fit(Y, telemetry=telemetry)
 
     # -- serving ------------------------------------------------------------
     def transform(self, Y_new: Array, *, max_iters: int | None = None,

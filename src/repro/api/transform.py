@@ -36,6 +36,7 @@ import jax.numpy as jnp
 from repro.core.objectives import (attractive_edge_terms, is_normalized,
                                    negative_pair_terms)
 from repro.embed.engine import LoopConfig, fit_loop
+from repro.obs import span
 from repro.sparse.graph import calibrated_weights_ell, knn_cross
 
 Array = jnp.ndarray
@@ -148,7 +149,9 @@ def transform_points(spec, Y_train: Array, X_train: Array, Y_new: Array,
             f"transform k={k} < perplexity={spec.perplexity}: the "
             f"candidate entropy cannot reach log(perplexity) "
             f"(use more training points or a smaller perplexity)")
-    idx, w = _anchor_affinities(Y_new, Y_train, k, float(spec.perplexity))
+    with span("cross-knn", phase=True, n_new=int(Y_new.shape[0]), k=k):
+        idx, w = jax.block_until_ready(
+            _anchor_affinities(Y_new, Y_train, k, float(spec.perplexity)))
 
     m = spec.transform_negatives if n_negatives is UNSET else n_negatives
     obj = TransformObjective(spec.kind, spec.lam, anchors, idx, w, m)

@@ -27,6 +27,13 @@ Backends implement the `Objective` protocol (docs/engine.md):
 and may additionally provide
 
     stochastic: bool        EMA convergence + per-iteration PRNG keys
+    diagnostics()           host-side dict of solver diagnostics from the
+                            LAST step (e.g. PCG iteration count/residual,
+                            streaming-Z EMA) — how per-iteration solver
+                            state gets out of jitted steps and into the
+                            telemetry records / diagnostics table; only
+                            called when someone is listening (telemetry,
+                            on_iteration, or a diagnostics-aware callback)
     make_fused_step()       a single jitted (X, E, G, state, alpha) ->
                             (X, E, G, state, alpha, n_evals) program that
                             replaces the whole direction/line-search/update
@@ -50,7 +57,9 @@ sparse (sparse/sharding.py via embed/trainer.py).
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import time
+import warnings
 from typing import Any, Callable, Protocol, runtime_checkable
 
 import jax
@@ -59,6 +68,7 @@ import numpy as np
 
 from repro.ckpt import Checkpointer
 from repro.core.linesearch import LSConfig
+from repro.obs import IterationRecord, device_memory_stats, span
 
 Array = jnp.ndarray
 
@@ -100,6 +110,10 @@ class EngineResult:
     setup_time: float         # direction-solver init (e.g. Cholesky)
     resumed_from: int | None
     state: Any = None         # final direction-solver state
+    diagnostics: list[dict] | None = None   # per-iteration table (only
+                                            # collected when someone asked:
+                                            # telemetry / on_iteration /
+                                            # diagnostics-aware callback)
 
 
 def initial_step(X, P, alpha_prev: float, ls: LSConfig) -> float:
@@ -141,17 +155,63 @@ def _place(objective, X):
     return place(X) if place is not None else X
 
 
+def _callback_wants_diagnostics(callback) -> bool:
+    """True when `callback` accepts a 4th positional argument (or *args):
+    the new form is `callback(it, X, e, diagnostics)`.  Unintrospectable
+    callables are treated as legacy 3-arg."""
+    try:
+        sig = inspect.signature(callback)
+    except (TypeError, ValueError):
+        return False
+    n_pos = 0
+    for p in sig.parameters.values():
+        if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD):
+            n_pos += 1
+        elif p.kind == p.VAR_POSITIONAL:
+            return True
+    return n_pos >= 4
+
+
 def fit_loop(
     objective: Objective,
     X0: Array,
     cfg: LoopConfig = LoopConfig(),
-    callback: Callable[[int, Array, float], None] | None = None,
+    callback: Callable[..., None] | None = None,
+    *,
+    on_iteration: Callable[[int, Array, dict], None] | None = None,
+    telemetry=None,
 ) -> EngineResult:
     """Run the unified optimization loop to convergence or budget.
 
     Stops on relative (raw or EMA) energy decrease < tol, on max_iters, or
     on max_seconds of wall-clock (the paper's fixed-budget comparisons).
+
+    `callback(it, X, e, diagnostics)` receives the per-iteration
+    diagnostics dict (engine fields + whatever `objective.diagnostics()`
+    lifts out of the jitted step); the legacy 3-arg `callback(it, X, e)`
+    still works but is deprecated — prefer the 4-arg form or the
+    `on_iteration(it, X, diagnostics)` hook.  `telemetry` is a
+    `repro.obs.Telemetry`: its recorder gets one typed record per
+    iteration (JSONL when configured) and the engine's phase spans
+    (setup / compile / solve-iter / checkpoint) land on its tracer.
     """
+    cb_wants_diag = (callback is not None
+                     and _callback_wants_diagnostics(callback))
+    if callback is not None and not cb_wants_diag:
+        warnings.warn(
+            "the 3-arg fit_loop callback(it, X, e) is deprecated; accept "
+            "a 4th diagnostics-dict argument, or use on_iteration=",
+            DeprecationWarning, stacklevel=2)
+    if telemetry is not None:
+        with telemetry.activate():
+            return _fit_loop(objective, X0, cfg, callback, cb_wants_diag,
+                             on_iteration, telemetry)
+    return _fit_loop(objective, X0, cfg, callback, cb_wants_diag,
+                     on_iteration, None)
+
+
+def _fit_loop(objective, X0, cfg, callback, cb_wants_diag, on_iteration,
+              telemetry) -> EngineResult:
     stochastic = bool(getattr(objective, "stochastic", False))
     conv = cfg.convergence
     if conv == "auto":
@@ -159,9 +219,16 @@ def fit_loop(
     if conv not in ("raw", "ema"):
         raise ValueError(f"unknown convergence mode {conv!r}")
 
+    recorder = telemetry.recorder if telemetry is not None else None
+    want_diag = (recorder is not None or cb_wants_diag
+                 or on_iteration is not None)
+    obj_diag = getattr(objective, "diagnostics", None)
+    record_memory = recorder is not None and recorder.record_memory
+
     t0 = time.perf_counter()
-    solve, state = objective.make_direction_solver()
-    state = jax.block_until_ready(state)
+    with span("setup", phase=True):
+        solve, state = objective.make_direction_solver()
+        state = jax.block_until_ready(state)
     setup_time = time.perf_counter() - t0
 
     make_fused = getattr(objective, "make_fused_step", None)
@@ -221,7 +288,10 @@ def fit_loop(
         E = jnp.asarray(float(saved_eg[0]), X0.dtype)
         G = _place(objective, jnp.asarray(saved_eg[1]))
     else:
-        E, G = jax.block_until_ready(objective.energy_and_grad(X, key))
+        # the first energy/grad call traces + compiles the backend's XLA
+        # program(s) — this span IS the compile phase of the run
+        with span("compile", phase=True):
+            E, G = jax.block_until_ready(objective.energy_and_grad(X, key))
     if obj_carry is not None:
         # re-install the checkpointed objective state AFTER the initial
         # energy/grad call (which may have advanced it), so iteration
@@ -235,6 +305,10 @@ def fit_loop(
     fevals = [1]
     if ema is None:
         ema = float(E)
+    if recorder is not None:
+        recorder.set_meta(start_it=start_it, resumed_from=resumed_from,
+                          stochastic=stochastic, max_iters=cfg.max_iters,
+                          e0=float(E))
 
     def save(step):
         if ckpt is not None:
@@ -250,47 +324,69 @@ def fit_loop(
             }
             if carry is not None:
                 payload["obj"] = carry()
-            ckpt.save(step, payload)
+            with span("checkpoint", it=step):
+                ckpt.save(step, payload)
 
     converged = False
+    diags: list[dict] = []
     t_loop = time.perf_counter()
     it = start_it
     for it in range(start_it + 1, cfg.max_iters + 1):
-        if fused_step is not None:
-            X, E_new, G, state, alpha_dev, ne = jax.block_until_ready(
-                fused_step(X, E, G, state, alpha_dev))
-            e_rec = float(E_new)
-            alpha_host = float(alpha_dev)
-            n_ev = int(ne)
-        else:
-            n_ev = 0
-            if stochastic:
-                # one PRNG key per iteration: the line search descends a
-                # deterministic surrogate (common random numbers)
-                key = jax.random.fold_in(key0, it)
-                E, G = objective.energy_and_grad(X, key)
-                n_ev += 1
-            P, state = solve(state, X, G)
-            alpha0 = initial_step(X, P, alpha_host, cfg.ls)
-            alpha_host, e_new, n_bt = host_backtrack(
-                lambda Xn: float(objective.energy(Xn, key)),
-                X, float(E), G, P, alpha0, cfg.ls)
-            n_ev += n_bt
-            X = X + alpha_host * P
-            if stochastic:
-                e_rec = e_new      # this iteration's surrogate, at accepted X
+        with span("solve-iter", it=it):
+            if fused_step is not None:
+                X, E_new, G, state, alpha_dev, ne = jax.block_until_ready(
+                    fused_step(X, E, G, state, alpha_dev))
+                e_rec = float(E_new)
+                alpha_host = float(alpha_dev)
+                n_ev = int(ne)
             else:
-                E, G = objective.energy_and_grad(X, key)
-                e_rec = float(E)
-                n_ev += 1
+                n_ev = 0
+                if stochastic:
+                    # one PRNG key per iteration: the line search descends
+                    # a deterministic surrogate (common random numbers)
+                    key = jax.random.fold_in(key0, it)
+                    E, G = objective.energy_and_grad(X, key)
+                    n_ev += 1
+                P, state = solve(state, X, G)
+                alpha0 = initial_step(X, P, alpha_host, cfg.ls)
+                alpha_host, e_new, n_bt = host_backtrack(
+                    lambda Xn: float(objective.energy(Xn, key)),
+                    X, float(E), G, P, alpha0, cfg.ls)
+                n_ev += n_bt
+                X = X + alpha_host * P
+                if stochastic:
+                    e_rec = e_new  # this iteration's surrogate, accepted X
+                else:
+                    E, G = objective.energy_and_grad(X, key)
+                    e_rec = float(E)
+                    n_ev += 1
         now = time.perf_counter() - t_loop
         energies.append(e_rec)
         gnorms.append(float(jnp.linalg.norm(G)))
         steps.append(alpha_host)
         times.append(now)
         fevals.append(fevals[-1] + n_ev)
+        diag = None
+        if want_diag:
+            extras = dict(obj_diag()) if obj_diag is not None else {}
+            if record_memory:
+                extras.update(device_memory_stats())
+            diag = {"it": it, "energy": e_rec, "grad_norm": gnorms[-1],
+                    "alpha": alpha_host, "n_evals": n_ev, "t": now,
+                    "iter_s": now - times[-2], **extras}
+            diags.append(diag)
+            if recorder is not None:
+                recorder.record(IterationRecord(
+                    it=it, energy=e_rec, grad_norm=gnorms[-1],
+                    alpha=alpha_host, n_evals=n_ev, t=now,
+                    iter_s=now - times[-2], extras=extras))
         if callback is not None:
-            callback(it, X, e_rec)
+            if cb_wants_diag:
+                callback(it, X, e_rec, diag)
+            else:
+                callback(it, X, e_rec)
+        if on_iteration is not None:
+            on_iteration(it, X, diag)
         if conv == "ema":
             ema_new = cfg.ema_decay * ema + (1.0 - cfg.ema_decay) * e_rec
             rel = abs(ema - ema_new) / max(abs(ema_new), 1e-30)
@@ -320,4 +416,5 @@ def fit_loop(
         setup_time=setup_time,
         resumed_from=resumed_from,
         state=state,
+        diagnostics=diags if want_diag else None,
     )

@@ -45,6 +45,7 @@ from repro.core.laplacian import degree
 from repro.core.linesearch import LSConfig
 from repro.core.objectives import attractive_weights
 from repro.core.strategies import _jitter
+from repro.obs import span
 from repro.sparse import (make_sd_operator, make_sharded_energy_grad,
                           make_sharded_sd_operator, pcg,
                           shard_sparse_affinities, sparse_affinities,
@@ -140,11 +141,15 @@ class FitResult:
     times: np.ndarray
     n_iters: int
     resumed_from: int | None
+    diagnostics: list[dict] | None = None   # per-iteration table when the
+                                            # run was fit with telemetry /
+                                            # a diagnostics consumer
 
 
 def to_fit_result(res: EngineResult) -> FitResult:
     return FitResult(X=res.X, energies=res.energies, times=res.times,
-                     n_iters=res.n_iters, resumed_from=res.resumed_from)
+                     n_iters=res.n_iters, resumed_from=res.resumed_from,
+                     diagnostics=res.diagnostics)
 
 
 def make_loop_config(cfg, ls: LSConfig) -> LoopConfig:
@@ -194,8 +199,12 @@ class _SparseObjective:
     variants.  Stochastic: the engine draws one fold_in key per iteration,
     so the line search descends a deterministic surrogate (common random
     numbers) and convergence is tested on an EMA of the surrogate
-    energies.  `solve(G, P0) -> P` may use P0 as a warm start (the PCG
-    spectral direction does; the diagonal strategies ignore it)."""
+    energies.  `solve(G, P0) -> (P, diag)` may use P0 as a warm start (the
+    PCG spectral direction does; the diagonal strategies ignore it);
+    `diag` is a dict of device scalars the solver computed anyway (PCG
+    iteration count, final relative residual) — kept on the objective and
+    surfaced host-side through `diagnostics()` so the engine's telemetry
+    records solver quality, not just wall-clock."""
 
     stochastic = True
 
@@ -203,6 +212,7 @@ class _SparseObjective:
         self._eg, self._e_only, self._solve = eg, e_only, solve
         self._X0 = X0
         self._place = place
+        self._solver_diag: dict = {}
 
     def energy_and_grad(self, X, key):
         return self._eg(X, key)
@@ -212,10 +222,16 @@ class _SparseObjective:
 
     def make_direction_solver(self):
         def solve(prev_P, X, G):
-            P = self._solve(G, jnp.asarray(prev_P))   # CG warm start
-            return P, P
+            P, self._solver_diag = self._solve(G, jnp.asarray(prev_P))
+            return P, P                                # CG warm start
 
         return solve, jnp.zeros_like(self._X0)
+
+    def diagnostics(self) -> dict:
+        """Host floats of the last direction solve's diagnostics (only
+        called when telemetry or a diagnostics consumer is attached, so
+        the device->host transfer is never paid by plain fits)."""
+        return {k: float(v) for k, v in self._solver_diag.items()}
 
     def place(self, X):
         return self._place(X) if self._place is not None else X
@@ -246,6 +262,9 @@ class _NormalizedSparseObjective(_SparseObjective):
     def restore_carry(self, z):
         self._z = jnp.asarray(z)
 
+    def diagnostics(self) -> dict:
+        return {**super().diagnostics(), "z_ema": float(self._z)}
+
 
 # -- backend builders -----------------------------------------------------------
 
@@ -264,7 +283,9 @@ def build_dense_mesh_objective(cfg, mesh: Mesh,
     """
     if mspec is None:
         mspec = default_mesh_spec(mesh)
-    aff = make_affinities(jnp.asarray(Y), cfg.perplexity, model=cfg.kind)
+    with span("graph-build", phase=True, n=Y.shape[0], dense=True):
+        aff = jax.block_until_ready(
+            make_affinities(jnp.asarray(Y), cfg.perplexity, model=cfg.kind))
     X = jnp.asarray(X0) if X0 is not None \
         else laplacian_eigenmaps(aff.Wp, cfg.dim) * 0.1
     lam = jnp.asarray(cfg.lam, X.dtype)
@@ -356,8 +377,11 @@ def build_sparse_objective(cfg, mesh: Mesh | None = None,
     saff = sparse_affinities(jnp.asarray(Y), k=k,
                              perplexity=cfg.perplexity, model=cfg.kind,
                              method=cfg.knn_method)
-    X = jnp.asarray(X0) if X0 is not None else _sparse_spectral_init(
-        cfg, saff, n)
+    if X0 is not None:
+        X = jnp.asarray(X0)
+    else:
+        with span("spectral-init", phase=True, n=n):
+            X = jax.block_until_ready(_sparse_spectral_init(cfg, saff, n))
 
     if sharded:
         sg = shard_sparse_affinities(mesh, mspec.row_axes, saff)
@@ -406,12 +430,16 @@ def build_sparse_objective(cfg, mesh: Mesh | None = None,
     if strategy == "sd":
         @jax.jit
         def solve(G, P0):
-            return pcg(matvec, -G, P0, inv_diag=inv_diag,
-                       tol=cfg.cg_tol, maxiter=cfg.cg_maxiter).x
+            # surface the PCG counters the solver computes anyway — two
+            # extra scalar outputs, no extra work in the jitted program
+            r = pcg(matvec, -G, P0, inv_diag=inv_diag,
+                    tol=cfg.cg_tol, maxiter=cfg.cg_maxiter)
+            return r.x, {"pcg_iters": r.n_iters,
+                         "pcg_residual": r.rel_residual}
     elif strategy == "fp":
-        solve = jax.jit(lambda G, P0: -inv_diag[:, None] * G)
+        solve = jax.jit(lambda G, P0: (-inv_diag[:, None] * G, {}))
     elif strategy == "gd":
-        solve = jax.jit(lambda G, P0: -G)
+        solve = jax.jit(lambda G, P0: (-G, {}))
     else:
         raise ValueError(
             f"strategy {strategy!r} is not available on the sparse "

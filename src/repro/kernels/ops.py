@@ -11,6 +11,14 @@ aligned shapes:
     X rows sit at the origin; their a/b weights are all zero).
   * d is padded to `lane` columns of zeros — this changes no distance and
     no output in the first d columns.
+
+Observability: the public wrappers open a `repro.obs` span around kernel
+dispatch (`kernel/pairwise_terms`, `kernel/ell_lap_matvec`).  Because the
+wrappers are jitted (and usually traced inside a larger jitted program),
+the span fires at TRACE time — once per compiled shape — so what it
+records is dispatch/compile cost, not steady-state device time; per-call
+device timing belongs to `jax.profiler` (Telemetry(jax_annotations=True)).
+The span is a no-op (one contextvar read) when no tracer is active.
 """
 from __future__ import annotations
 
@@ -18,6 +26,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
+from repro.obs import span
 
 from .pairwise import pairwise_terms_pallas
 from .ref import KINDS, PairwiseTerms, ell_lap_matvec_ref, pairwise_terms_ref
@@ -56,27 +66,29 @@ def pairwise_terms(
         raise ValueError(f"unknown kind {kind!r}")
     if use_pallas is None:
         use_pallas = _on_tpu()
-    if not use_pallas:
-        return pairwise_terms_ref(X, Wa, Wb, kind)
+    with span("kernel/pairwise_terms", n=X.shape[0], kind=kind,
+              pallas=bool(use_pallas)):
+        if not use_pallas:
+            return pairwise_terms_ref(X, Wa, Wb, kind)
 
-    if interpret is None:
-        interpret = not _on_tpu()
-    n, d = X.shape
-    br = min(block_rows, max(8, n))
-    bc = min(block_cols, max(8, n))
-    n_pad = -(-n // br) * br
-    n_pad = -(-n_pad // bc) * bc
-    dp = max(lane, d)
-    Xp = _pad_to(X.astype(jnp.float32), n_pad, dp)
-    Wap = _pad_to(Wa.astype(jnp.float32), n_pad, n_pad)
-    Wbp = _pad_to(Wb.astype(jnp.float32), n_pad, n_pad)
-    t = pairwise_terms_pallas(
-        Xp, Wap, Wbp, kind,
-        block_rows=br, block_cols=bc, interpret=interpret,
-    )
-    return PairwiseTerms(
-        la_x=t.la_x[:n, :d], lb_x=t.lb_x[:n, :d], e_plus=t.e_plus, s=t.s
-    )
+        if interpret is None:
+            interpret = not _on_tpu()
+        n, d = X.shape
+        br = min(block_rows, max(8, n))
+        bc = min(block_cols, max(8, n))
+        n_pad = -(-n // br) * br
+        n_pad = -(-n_pad // bc) * bc
+        dp = max(lane, d)
+        Xp = _pad_to(X.astype(jnp.float32), n_pad, dp)
+        Wap = _pad_to(Wa.astype(jnp.float32), n_pad, n_pad)
+        Wbp = _pad_to(Wb.astype(jnp.float32), n_pad, n_pad)
+        t = pairwise_terms_pallas(
+            Xp, Wap, Wbp, kind,
+            block_rows=br, block_cols=bc, interpret=interpret,
+        )
+        return PairwiseTerms(
+            la_x=t.la_x[:n, :d], lb_x=t.lb_x[:n, :d], e_plus=t.e_plus, s=t.s
+        )
 
 
 @functools.partial(
@@ -104,18 +116,20 @@ def ell_lap_matvec(
     """
     if use_pallas is None:
         use_pallas = _on_tpu()
-    if not use_pallas:
-        return ell_lap_matvec_ref(X, indices, weights)
+    with span("kernel/ell_lap_matvec", n=X.shape[0], k=indices.shape[1],
+              pallas=bool(use_pallas)):
+        if not use_pallas:
+            return ell_lap_matvec_ref(X, indices, weights)
 
-    if interpret is None:
-        interpret = not _on_tpu()
-    n, d = X.shape
-    br = min(block_rows, max(8, n))
-    n_pad = -(-n // br) * br
-    dp = max(lane, d)
-    Xp = _pad_to(X.astype(jnp.float32), n_pad, dp)
-    idx_p = jnp.pad(indices.astype(jnp.int32), ((0, n_pad - n), (0, 0)))
-    w_p = _pad_to(weights.astype(jnp.float32), n_pad, weights.shape[1])
-    out = ell_lap_matvec_pallas(
-        Xp, idx_p, w_p, block_rows=br, interpret=interpret)
-    return out[:n, :d]
+        if interpret is None:
+            interpret = not _on_tpu()
+        n, d = X.shape
+        br = min(block_rows, max(8, n))
+        n_pad = -(-n // br) * br
+        dp = max(lane, d)
+        Xp = _pad_to(X.astype(jnp.float32), n_pad, dp)
+        idx_p = jnp.pad(indices.astype(jnp.int32), ((0, n_pad - n), (0, 0)))
+        w_p = _pad_to(weights.astype(jnp.float32), n_pad, weights.shape[1])
+        out = ell_lap_matvec_pallas(
+            Xp, idx_p, w_p, block_rows=br, interpret=interpret)
+        return out[:n, :d]

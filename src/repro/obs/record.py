@@ -1,0 +1,173 @@
+"""Typed per-iteration run records + the JSONL recorder.
+
+Schema (one JSON object per line, `"type"` discriminated):
+
+    {"type": "meta",  ...}                      # free-form run metadata
+    {"type": "phase", "name": str, "dur_s": float}
+    {"type": "iter",  "it": int, "energy": float, "grad_norm": float,
+     "alpha": float, "n_evals": int, "t": float, "iter_s": float,
+     "extras": {str: float}}
+
+`extras` carries whatever the backend's `Objective.diagnostics()` lifted
+out of its jitted step — `pcg_iters`/`pcg_residual` from the sparse
+spectral solve, `z_ema` from the normalized models' streaming partition
+function — plus `mem_bytes_in_use`/`mem_peak_bytes` where the device
+reports them.  The schema is append-only: readers must ignore unknown
+keys and unknown record types, so new diagnostics never break old
+tooling (`load_jsonl` and `repro.obs.report` both follow this rule).
+
+A resumed fit APPENDS to the same JSONL file (the recorder opens in "a"
+mode), so iteration records stay contiguous across a checkpoint boundary
+— pinned in tests/test_obs.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, IO
+
+import jax
+
+
+def device_memory_stats(device=None) -> dict[str, float]:
+    """Best-effort device memory counters, safe on every backend.
+
+    CPU (and some TPU driver versions) return ``None`` from
+    `Device.memory_stats()`; others raise — telemetry must never crash a
+    run over a missing counter, so every failure mode maps to ``{}``.
+    """
+    try:
+        dev = device if device is not None else jax.devices()[0]
+        stats = getattr(dev, "memory_stats", lambda: None)()
+    except Exception:
+        return {}
+    if not stats:
+        return {}
+    out = {}
+    if "bytes_in_use" in stats:
+        out["mem_bytes_in_use"] = float(stats["bytes_in_use"])
+    if "peak_bytes_in_use" in stats:
+        out["mem_peak_bytes"] = float(stats["peak_bytes_in_use"])
+    return out
+
+
+@dataclasses.dataclass
+class IterationRecord:
+    """One engine iteration, fully host-side (plain python scalars)."""
+
+    it: int
+    energy: float
+    grad_norm: float
+    alpha: float
+    n_evals: int
+    t: float                  # cumulative loop seconds at this iterate
+    iter_s: float             # this iteration's wall-clock
+    extras: dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["type"] = "iter"
+        return d
+
+    @classmethod
+    def from_json(cls, obj: dict[str, Any]) -> "IterationRecord":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in obj.items() if k in fields})
+
+
+class RunRecorder:
+    """In-memory buffer of `IterationRecord`s + optional JSONL mirror.
+
+    Every `record()` both appends to `.records` and (when a path was
+    given) writes one line — the file is line-buffered JSONL, so a
+    crashed run still leaves every completed iteration on disk.
+    """
+
+    def __init__(self, jsonl_path: str | None = None,
+                 record_memory: bool = True):
+        self.jsonl_path = jsonl_path
+        self.record_memory = record_memory
+        self.records: list[IterationRecord] = []
+        self.phases: list[dict[str, Any]] = []
+        self.meta: dict[str, Any] = {}
+        self._fh: IO[str] | None = None
+
+    # -- writing ------------------------------------------------------------
+    def _file(self) -> IO[str] | None:
+        if self.jsonl_path is None:
+            return None
+        if self._fh is None or self._fh.closed:
+            self._fh = open(self.jsonl_path, "a")
+        return self._fh
+
+    def _emit(self, obj: dict[str, Any]) -> None:
+        fh = self._file()
+        if fh is not None:
+            fh.write(json.dumps(obj) + "\n")
+
+    def set_meta(self, **kw: Any) -> None:
+        self.meta.update(kw)
+        self._emit({"type": "meta", **kw})
+
+    def record_phase(self, name: str, dur_s: float) -> None:
+        entry = {"name": name, "dur_s": float(dur_s)}
+        self.phases.append(entry)
+        self._emit({"type": "phase", **entry})
+
+    def record(self, rec: IterationRecord) -> None:
+        self.records.append(rec)
+        self._emit(rec.to_json())
+
+    def flush(self) -> None:
+        if self._fh is not None and not self._fh.closed:
+            self._fh.flush()
+
+    def close(self) -> None:
+        if self._fh is not None and not self._fh.closed:
+            self._fh.close()
+
+    # -- reading ------------------------------------------------------------
+    def summary(self) -> dict[str, Any]:
+        """Aggregates for reports and the CI bench gate: iteration count,
+        final energy, mean/total timings and the mean of every `extras`
+        diagnostic present in any record (e.g. ``pcg_iters``)."""
+        recs = self.records
+        out: dict[str, Any] = {
+            "n_iters": len(recs),
+            "phases": {p["name"]: p["dur_s"] for p in self.phases},
+        }
+        if not recs:
+            return out
+        out["final_energy"] = recs[-1].energy
+        out["total_s"] = recs[-1].t
+        out["mean_iter_s"] = sum(r.iter_s for r in recs) / len(recs)
+        out["total_evals"] = sum(r.n_evals for r in recs)
+        keys = sorted({k for r in recs for k in r.extras})
+        for k in keys:
+            vals = [r.extras[k] for r in recs if k in r.extras]
+            out[f"mean_{k}"] = sum(vals) / len(vals)
+        return out
+
+
+def load_jsonl(path: str) -> tuple[dict, list[dict], list[IterationRecord]]:
+    """Read a recorder JSONL back: (meta, phases, iteration records).
+    Unknown record types and unknown keys are ignored (append-only
+    schema)."""
+    meta: dict[str, Any] = {}
+    phases: list[dict] = []
+    records: list[IterationRecord] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            obj = json.loads(line)
+            kind = obj.get("type")
+            if kind == "meta":
+                meta.update({k: v for k, v in obj.items() if k != "type"})
+            elif kind == "phase":
+                phases.append({"name": obj["name"],
+                               "dur_s": float(obj["dur_s"])})
+            elif kind == "iter":
+                records.append(IterationRecord.from_json(obj))
+    return meta, phases, records

@@ -1,0 +1,92 @@
+"""`Telemetry`: the user-facing telemetry switch and its resolution.
+
+    Embedding(spec).fit(Y, telemetry=True)            # in-memory only
+    Embedding(spec).fit(Y, telemetry="runs/exp1")     # JSONL + trace files
+    Embedding(spec).fit(Y, telemetry=Telemetry(jsonl="r.jsonl",
+                                               trace="trace.json",
+                                               jax_annotations=True))
+
+One `Telemetry` bundles the recorder (per-iteration JSONL records) and
+the span tracer (Chrome-trace export); backends activate it around graph
+build + fit so every `repro.obs.span` instrumentation point lands in one
+timeline.  `finalize()` is idempotent — `Embedding.fit` calls it after
+the engine returns, flushing the JSONL and writing the trace file.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any
+
+from .record import RunRecorder
+from .spans import SpanTracer, activate
+
+
+@dataclasses.dataclass
+class Telemetry:
+    """Telemetry configuration + live recorder/tracer pair.
+
+    jsonl:           per-iteration records file (appended, so a resumed
+                     fit keeps one contiguous record stream); None keeps
+                     records in memory only.
+    trace:           Chrome-trace-event JSON output path; None skips the
+                     trace export (spans still collect in memory).
+    jax_annotations: mirror every span into `jax.profiler.TraceAnnotation`
+                     so an external `jax.profiler.trace` capture shows the
+                     same names next to XLA events.
+    record_memory:   include device memory counters in iteration records
+                     (safely skipped where `memory_stats()` is None).
+    """
+
+    jsonl: str | None = None
+    trace: str | None = None
+    jax_annotations: bool = False
+    record_memory: bool = True
+
+    def __post_init__(self):
+        self.recorder = RunRecorder(self.jsonl,
+                                    record_memory=self.record_memory)
+        self.tracer = SpanTracer(jax_annotations=self.jax_annotations,
+                                 recorder=self.recorder)
+        self._finalized = False
+
+    def activate(self):
+        """Scope `repro.obs.span()` to this telemetry's tracer."""
+        return activate(self.tracer)
+
+    def finalize(self) -> None:
+        """Flush the JSONL and write the trace file; idempotent (the
+        trace is rewritten with the latest spans if called again)."""
+        self.recorder.flush()
+        if self.trace is not None:
+            self.tracer.write_chrome_trace(self.trace)
+        self._finalized = True
+
+    def summary(self) -> dict[str, Any]:
+        return self.recorder.summary()
+
+
+def resolve_telemetry(arg: Any) -> Telemetry | None:
+    """The `Embedding.fit(telemetry=...)` argument contract:
+
+    None / False  -> no telemetry (zero overhead beyond a contextvar read
+                     at each instrumentation point)
+    True          -> in-memory recorder + tracer, no files
+    str (a dir)   -> Telemetry(jsonl=<dir>/run.jsonl,
+                               trace=<dir>/trace.json), dir created
+    Telemetry     -> used as-is (caller owns paths and options)
+    """
+    if arg is None or arg is False:
+        return None
+    if arg is True:
+        return Telemetry()
+    if isinstance(arg, (str, os.PathLike)):
+        d = os.fspath(arg)
+        os.makedirs(d, exist_ok=True)
+        return Telemetry(jsonl=os.path.join(d, "run.jsonl"),
+                         trace=os.path.join(d, "trace.json"))
+    if isinstance(arg, Telemetry):
+        return arg
+    raise TypeError(
+        f"telemetry= wants None, bool, a directory path or a Telemetry, "
+        f"got {type(arg).__name__}")

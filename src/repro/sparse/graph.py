@@ -36,6 +36,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.obs import span
+
 Array = jnp.ndarray
 
 
@@ -267,16 +269,23 @@ def sparse_affinities(Y: Array, k: int, perplexity: float = 30.0,
       normalized models:  W+ = (P_cond + P_cond^T) / (2N)   -> A = P_cond / N
     """
     n = Y.shape[0]
-    d2, idx = knn_graph(Y, k, method=method, **knn_kw)
-    valid = idx != jnp.arange(n, dtype=idx.dtype)[:, None]
-    w = calibrated_weights_ell(d2, valid, perplexity)
-    if model in ("ssne", "tsne"):
-        w = w / n
-    # enforce the padding invariant (invalid slots: self index, zero weight)
-    idx = jnp.where(valid, idx, jnp.arange(n, dtype=idx.dtype)[:, None])
-    w = jnp.where(valid, w, 0.0)
-    g = NeighborGraph(indices=idx, weights=w)
-    return SparseAffinities(graph=g, rev=reverse_graph(g))
+    with span("graph-build", phase=True, n=n, k=k):
+        with span("graph-build/knn", method=method):
+            d2, idx = jax.block_until_ready(
+                knn_graph(Y, k, method=method, **knn_kw))
+        valid = idx != jnp.arange(n, dtype=idx.dtype)[:, None]
+        with span("graph-build/calibrate", perplexity=perplexity):
+            w = jax.block_until_ready(
+                calibrated_weights_ell(d2, valid, perplexity))
+        if model in ("ssne", "tsne"):
+            w = w / n
+        # padding invariant (invalid slots: self index, zero weight)
+        idx = jnp.where(valid, idx, jnp.arange(n, dtype=idx.dtype)[:, None])
+        w = jnp.where(valid, w, 0.0)
+        g = NeighborGraph(indices=idx, weights=w)
+        with span("graph-build/reverse"):
+            rev = reverse_graph(g)
+    return SparseAffinities(graph=g, rev=rev)
 
 
 def reverse_graph(g: NeighborGraph, width: int | None = None) -> NeighborGraph:

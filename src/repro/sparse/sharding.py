@@ -51,6 +51,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.objectives import (attractive_edge_terms, directed_lap_apply,
                                    is_normalized, negative_pair_terms)
 from repro.launch.mesh import linear_row_index, shard_map
+from repro.obs import span
 
 from .graph import SparseAffinities, reverse_graph
 from .linalg import make_sd_operator
@@ -113,13 +114,14 @@ def shard_sparse_affinities(mesh: Mesh, row_axes: tuple[str, ...],
                     constant_values=pad_value)
         return jax.device_put(a, spec)
 
-    return ShardedSparseGraph(
-        indices=pad_place(g.indices.astype(jnp.int32), 0),
-        weights=pad_place(g.weights, 0),
-        rev_indices=pad_place(rev.indices.astype(jnp.int32), 0),
-        rev_weights=pad_place(rev.weights, 0),
-        n=n, n_pad=n_pad,
-    )
+    with span("graph-shard", phase=True, n=n, n_pad=n_pad, groups=groups):
+        return ShardedSparseGraph(
+            indices=pad_place(g.indices.astype(jnp.int32), 0),
+            weights=pad_place(g.weights, 0),
+            rev_indices=pad_place(rev.indices.astype(jnp.int32), 0),
+            rev_weights=pad_place(rev.weights, 0),
+            n=n, n_pad=n_pad,
+        )
 
 
 def _directed_lap_local(xi, Xp, idx, w):
@@ -158,6 +160,10 @@ def make_sharded_energy_grad(mesh: Mesh, row_axes: tuple[str, ...],
     all_axes = tuple(mesh.axis_names)
     exhaustive = n_negatives is None or n_negatives >= n - 1
 
+    # named_scope tags the per-shard epoch body in XLA/HLO metadata, so
+    # `jax.profiler` traces (obs.Telemetry(jax_annotations=True)) attribute
+    # device time to it; it is free outside of tracing
+    @jax.named_scope("sharded-epoch")
     def body(with_grad, Xp, shifts, lam, scale, z_prev, idx, w, ridx, rw):
         nb = idx.shape[0]
         row0 = linear_row_index(row_axes) * nb
@@ -297,6 +303,7 @@ def make_sharded_sd_operator(mesh: Mesh, row_axes: tuple[str, ...],
     n, n_pad = sg.n, sg.n_pad
     all_axes = tuple(mesh.axis_names)
 
+    @jax.named_scope("sharded-sd-matvec")
     def body(Vp, idx, w, ridx, rw):
         nb = idx.shape[0]
         row0 = linear_row_index(row_axes) * nb
