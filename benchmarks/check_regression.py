@@ -33,6 +33,25 @@ gate additionally fails when
 
 A missing telemetry section or baseline file only warns: telemetry gates
 must be able to land before their baseline exists.
+
+Kernel gate (`--kernels-baseline results/kernels.json`): the bench's
+"kernels" section (benchmarks/kernel_bench.py) carries per-kernel
+microbench timings (same tree shape as fig5, so the same `_iter_timings`
+diff applies), the autotuned-vs-fixed-tile timing ratios, and the HBM
+cap-lift parity demo.  Beyond the baseline diff, two self-contained
+checks gate unconditionally when the section is present:
+
+  * every `autotuned_vs_fixed` ratio must stay below
+    KERNEL_AUTOTUNE_THRESHOLD (default 1.4 — interpret-mode microbench
+    noise at sub-millisecond scale is real; a genuinely bad tile choice
+    shows up as 2x+): the autotuner keeps the old fixed block_rows=256
+    in every candidate list, so losing to it by more than noise means
+    tile search itself regressed, and
+  * the hbm_demo must have dispatched layout=hbm with reason=vmem-cap
+    and match the jnp oracle to 1e-5 (the double-buffered gather's
+    correctness-above-the-VMEM-cap acceptance check).
+
+As everywhere else, a missing kernels section or baseline only warns.
 """
 from __future__ import annotations
 
@@ -130,6 +149,60 @@ def check_telemetry(bench: dict, baseline_path: str | None,
     return failures
 
 
+def check_kernels(bench: dict, baseline_path: str | None, threshold: float,
+                  autotune_threshold: float) -> int:
+    """Microbench diff + autotune/hbm self-checks over the bench's
+    "kernels" section.  Returns the number of failures; missing data only
+    warns (the gate must be able to land before its baseline exists)."""
+    kern = bench.get("kernels")
+    if not isinstance(kern, dict) or not kern:
+        print("kernel-gate: WARNING — bench has no kernels section; skipped")
+        return 0
+    failures = 0
+
+    base = {}
+    if baseline_path:
+        try:
+            with open(baseline_path) as f:
+                base = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"kernel-gate: WARNING — no usable baseline at "
+                  f"{baseline_path} ({e}); timing comparison skipped")
+    rows, regressions = compare(kern.get("timings", {}),
+                                base.get("timings", {}), threshold)
+    print(f"kernel-gate: timing threshold {threshold:.2f}x")
+    print(f"{'kernel':8s} {'n':>8s} {'column':>14s} {'base_s':>10s} "
+          f"{'new_s':>10s} {'ratio':>7s}  status")
+    for (kernel, n, col), b, v, ratio, status in rows:
+        fb = f"{b:.4f}" if b is not None else "-"
+        fv = f"{v:.4f}" if v is not None else "-"
+        fr = f"{ratio:.2f}" if ratio is not None else "-"
+        print(f"{kernel:8s} {n:>8s} {col:>14s} {fb:>10s} {fv:>10s} "
+              f"{fr:>7s}  {status}")
+    failures += len(regressions)
+
+    for key, ratio in sorted((kern.get("autotuned_vs_fixed") or {}).items()):
+        status = "FAIL" if float(ratio) > autotune_threshold else "ok"
+        failures += status == "FAIL"
+        print(f"kernel-gate: autotuned/fixed {key:16s} "
+              f"{float(ratio):.3f} (<= {autotune_threshold:.2f})  {status}")
+
+    demo = kern.get("hbm_demo")
+    if isinstance(demo, dict):
+        dispatched = (demo.get("layout") == "hbm"
+                      and demo.get("reason") == "vmem-cap")
+        err = float(demo.get("max_rel_err", float("inf")))
+        ok = dispatched and err <= 1e-5
+        failures += not ok
+        print(f"kernel-gate: hbm_demo n={demo.get('n')} "
+              f"layout={demo.get('layout')}/{demo.get('reason')} "
+              f"err={err:.2e} (<= 1e-5)  {'ok' if ok else 'FAIL'}")
+    else:
+        print("kernel-gate: WARNING — no hbm_demo entry; cap-lift check "
+              "skipped")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--bench", default="BENCH_smoke.json")
@@ -145,6 +218,14 @@ def main() -> int:
     ap.add_argument("--overhead-threshold", type=float,
                     default=float(os.environ.get(
                         "TELEMETRY_OVERHEAD_THRESHOLD", 1.05)))
+    ap.add_argument("--kernels-baseline", default=None,
+                    help="committed results/kernels.json to diff the "
+                         "bench's kernels section against; omitting it "
+                         "skips the timing diff but still enforces the "
+                         "autotuned-vs-fixed and hbm-parity self-checks")
+    ap.add_argument("--autotune-threshold", type=float,
+                    default=float(os.environ.get(
+                        "KERNEL_AUTOTUNE_THRESHOLD", 1.4)))
     a = ap.parse_args()
 
     with open(a.bench) as f:
@@ -167,6 +248,8 @@ def main() -> int:
 
     tel_failures = check_telemetry(bench, a.telemetry_baseline,
                                    a.threshold, a.overhead_threshold)
+    kern_failures = check_kernels(bench, a.kernels_baseline, a.threshold,
+                                  a.autotune_threshold)
 
     compared = [r for r in rows if r[3] is not None]
     if not compared:
@@ -178,7 +261,9 @@ def main() -> int:
     if tel_failures:
         print(f"telemetry-gate: FAIL — {tel_failures} telemetry check(s) "
               f"out of budget")
-    if regressions or tel_failures:
+    if kern_failures:
+        print(f"kernel-gate: FAIL — {kern_failures} kernel check(s) failed")
+    if regressions or tel_failures or kern_failures:
         return 1
     if compared:
         print(f"bench-regression: OK — {len(compared)} timing(s) within "

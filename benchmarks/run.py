@@ -17,7 +17,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import (fig1_learning_curves, fig2_random_inits,
                         fig3_homotopy, fig4_large, fig5_sparse_scaling,
-                        sd_overhead, telemetry_smoke)
+                        kernel_bench, sd_overhead, telemetry_smoke)
 
 
 def main() -> None:
@@ -49,9 +49,15 @@ def main() -> None:
         # health + overhead numbers the regression gate checks
         res_tel = telemetry_smoke.run(n=2048, iters=12, perplexity=3.0,
                                       out_dir="results/telemetry")
+        # kernel microbench: jnp vs fixed-tile vs autotuned Pallas + the
+        # HBM cap-lift parity demo; the regression gate diffs its timings
+        # against results/kernels.json and checks autotuned <= fixed
+        res_k = kernel_bench.run(ns=(512, 1024), pairwise_ns=(256,),
+                                 hbm_n=512, out_json="results/kernels.json")
         import jax
         with open(a.bench_out, "w") as f:
             json.dump({"fig5": res5, "telemetry": res_tel,
+                       "kernels": res_k,
                        "meta": {"jax": jax.__version__,
                                 "devices": len(jax.devices()),
                                 "unix_time": time.time()}}, f)
@@ -70,6 +76,8 @@ def main() -> None:
         fig5_sparse_scaling.run(ns=(2000, 10_000, 50_000), iters=10,
                                 models=("ee", "tsne"),
                                 out_json="results/fig5.json")
+        kernel_bench.run(ns=(4096, 16_384), pairwise_ns=(1024,),
+                         hbm_n=1024, out_json="results/kernels.json")
     else:
         fig1_learning_curves.run(n_per=36, loops=6, iters=60,
                                  out_json="results/fig1.json")
@@ -86,6 +94,7 @@ def main() -> None:
         fig5_sparse_scaling.run(ns=(1000, 4000), iters=8,
                                 dense_cutoff=2000, models=("ee", "tsne"),
                                 out_json="results/fig5.json")
+        kernel_bench.run(out_json="results/kernels.json")
     # roofline table if a dry-run sweep exists
     if os.path.exists("results/dryrun.jsonl"):
         from benchmarks import roofline_report

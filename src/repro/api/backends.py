@@ -58,7 +58,8 @@ def fit_dense(spec, Y, *, X0=None, aff=None, mesh=None, mesh_spec=None,
             spec, **dict(spec.strategy_opts))
         ls = spec.resolved_ls()
         lam = jnp.asarray(spec.lam, dtype=X0.dtype)
-        obj = DenseObjective(aff, spec.kind, lam, strategy, ls, X0)
+        obj = DenseObjective(aff, spec.kind, lam, strategy, ls, X0,
+                             impl=tuple(sorted(spec.kernel_args().items())))
         return fit_loop(obj, X0, make_loop_config(spec, ls), callback,
                         telemetry=telemetry)
 

@@ -67,6 +67,12 @@ class EmbedSpec:
     # out-of-sample transform() (repro/api/transform.py)
     transform_iters: int = 100
     transform_negatives: int = 50  # anchor negatives per application
+    # kernel dispatch (docs/kernels.md)
+    kernel_impl: str = "auto"      # 'auto' | 'pallas' | 'pallas-interpret'
+                                   # | 'jnp' — forwarded to kernels.ops;
+                                   # 'auto' = Pallas on TPU, jnp elsewhere
+    kernel_precision: str = "float32"   # 'float32' | 'bfloat16' storage
+                                        # (accumulation is always f32)
 
     def __post_init__(self):
         validate_kind(self.kind)
@@ -74,6 +80,25 @@ class EmbedSpec:
             self, "strategy", registries.canonical_strategy(self.strategy))
         registries.validate_backend(self.backend)
         registries.validate_strategy_backend(self.strategy, self.backend)
+        from repro.kernels.ops import IMPLS, STORAGE_DTYPES
+
+        if self.kernel_impl not in IMPLS:
+            raise ValueError(
+                f"unknown kernel_impl {self.kernel_impl!r}; have {IMPLS}")
+        if self.kernel_precision not in STORAGE_DTYPES:
+            raise ValueError(
+                f"unknown kernel_precision {self.kernel_precision!r}; "
+                f"have {STORAGE_DTYPES}")
+
+    def kernel_args(self) -> dict:
+        """The `kernels.ops` dispatch kwargs this spec selects — empty at
+        the defaults, so legacy call paths stay byte-identical."""
+        out: dict = {}
+        if self.kernel_impl != "auto":
+            out["impl"] = self.kernel_impl
+        if self.kernel_precision != "float32":
+            out["storage_dtype"] = self.kernel_precision
+        return out
 
     def resolved_ls(self) -> LSConfig:
         """The line-search config, with the strategy's default initial-step

@@ -41,10 +41,11 @@ class MinimizeResult:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("strategy", "kind", "ls_cfg")
+    jax.jit, static_argnames=("strategy", "kind", "ls_cfg", "impl")
 )
-def _step(strategy, kind, ls_cfg: LSConfig, X, E, G, state, alpha_prev,
-          Wp, Wm, lam):
+def _step(strategy, kind, ls_cfg: LSConfig, X, E, G, state,
+          alpha_prev, Wp, Wm, lam, impl=()):
+    impl = dict(impl)   # hashable (k, v) pairs -> kernels.ops kwargs
     aff = Affinities(Wp, Wm)
     P, state = strategy.direction(state, X, G, aff, kind, lam)
     if ls_cfg.init_step == "adaptive":
@@ -59,10 +60,11 @@ def _step(strategy, kind, ls_cfg: LSConfig, X, E, G, state, alpha_prev,
         p_rms = jnp.sqrt(jnp.mean(P * P)) + 1e-30
         alpha0 = jnp.minimum(alpha0, ls_cfg.max_rel_move * scale / p_rms)
     ls = backtracking(
-        lambda Xn: energy(Xn, aff, kind, lam), X, E, G, P, alpha0, ls_cfg
+        lambda Xn: energy(Xn, aff, kind, lam, **impl), X, E, G, P, alpha0,
+        ls_cfg
     )
     X_new = X + ls.alpha * P
-    E_new, G_new = energy_and_grad(X_new, aff, kind, lam)
+    E_new, G_new = energy_and_grad(X_new, aff, kind, lam, **impl)
     return X_new, E_new, G_new, state, ls.alpha, ls.n_evals + 1
 
 
@@ -82,14 +84,19 @@ class DenseObjective:
     strategy: Any
     ls_cfg: LSConfig
     X0: Array
+    # kernels.ops dispatch kwargs as hashable (key, value) pairs — static
+    # under `_step`'s jit (e.g. (("impl", "pallas"),
+    # ("storage_dtype", "bfloat16")))
+    impl: tuple = ()
 
     stochastic = False
 
     def energy_and_grad(self, X, key):
-        return energy_and_grad(X, self.aff, self.kind, self.lam)
+        return energy_and_grad(X, self.aff, self.kind, self.lam,
+                               **dict(self.impl))
 
     def energy(self, X, key):
-        return energy(X, self.aff, self.kind, self.lam)
+        return energy(X, self.aff, self.kind, self.lam, **dict(self.impl))
 
     def make_direction_solver(self):
         def solve(state, X, G):
@@ -102,9 +109,9 @@ class DenseObjective:
 
     def make_fused_step(self):
         def step(X, E, G, state, alpha_prev):
-            return _step(self.strategy, self.kind, self.ls_cfg, X, E, G,
-                         state, alpha_prev, self.aff.Wp, self.aff.Wm,
-                         self.lam)
+            return _step(self.strategy, self.kind, self.ls_cfg,
+                         X, E, G, state, alpha_prev, self.aff.Wp,
+                         self.aff.Wm, self.lam, impl=self.impl)
 
         return step
 

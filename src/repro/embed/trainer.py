@@ -383,26 +383,36 @@ def build_sparse_objective(cfg, mesh: Mesh | None = None,
         with span("spectral-init", phase=True, n=n):
             X = jax.block_until_ready(_sparse_spectral_init(cfg, saff, n))
 
+    # kernel-dispatch knobs (EmbedSpec; legacy EmbedConfig has neither,
+    # so getattr keeps the deprecation shims byte-identical)
+    kernel_impl = getattr(cfg, "kernel_impl", "auto")
+    kernel_precision = getattr(cfg, "kernel_precision", "float32")
+    kernel_args = cfg.kernel_args() if hasattr(cfg, "kernel_args") else {}
+
     if sharded:
         sg = shard_sparse_affinities(mesh, mspec.row_axes, saff)
         eg_l, e_l = make_sharded_energy_grad(
             mesh, mspec.row_axes, sg, cfg.kind,
-            n_negatives=cfg.n_negatives, z_decay=cfg.z_ema_decay)
+            n_negatives=cfg.n_negatives, z_decay=cfg.z_ema_decay,
+            kernel_impl=kernel_impl, kernel_precision=kernel_precision)
         if normalized:
             eg = lambda X, key, z: eg_l(X, lam, key, z)
         else:
             eg = lambda X, key: eg_l(X, lam, key)
         e_only = lambda X, key: e_l(X, lam, key)
         matvec, inv_diag, _ = make_sharded_sd_operator(
-            mesh, mspec.row_axes, sg, saff, cfg.mu_scale)
+            mesh, mspec.row_axes, sg, saff, cfg.mu_scale,
+            kernel_impl=kernel_impl, kernel_precision=kernel_precision)
         place = lambda X: replicate(mesh, X)
         X = place(X)
     else:
         # SparseSD's Laplacian system is model-independent (the paper
         # freezes the attractive Hessian at X = 0, where every kernel's
-        # -K'(0) = 1), so normalized kinds reuse the same CG operator
+        # -K'(0) = 1), so normalized kinds reuse the same CG operator.
+        # The matvec is the CG hot path: kernel_args routes it through
+        # the Pallas dispatcher (vmem or HBM layout, bf16 storage)
         matvec, inv_diag, _ = make_sd_operator(saff.graph, saff.rev,
-                                               cfg.mu_scale)
+                                               cfg.mu_scale, **kernel_args)
 
         if normalized:
             @jax.jit

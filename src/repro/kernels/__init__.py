@@ -1,7 +1,12 @@
 # Pallas TPU kernels for the paper's O(N^2 d) pairwise hot spot and the
-# O(N k d) sparse attractive term, with pure-jnp oracles (ref.py) and
-# jit'd dispatch wrappers (ops.py).
-from . import ops, ref
+# O(N k d) sparse attractive term, with pure-jnp oracles (ref.py), the
+# dispatch layer (ops.py: path/layout/precision ladder + transparency)
+# and the at-first-dispatch tile autotuner (autotune.py).  docs/kernels.md
+# is the map.
+from . import autotune, ops, ref
+from .autotune import KernelConfig
+from .ops import last_dispatch
 from .ref import KINDS, PairwiseTerms, ell_lap_matvec_ref
 
-__all__ = ["ops", "ref", "KINDS", "PairwiseTerms", "ell_lap_matvec_ref"]
+__all__ = ["autotune", "ops", "ref", "KernelConfig", "last_dispatch",
+           "KINDS", "PairwiseTerms", "ell_lap_matvec_ref"]

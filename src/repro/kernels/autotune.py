@@ -1,0 +1,291 @@
+"""At-first-dispatch autotuner for the Pallas kernel suite.
+
+The kernels in this package are tiled, and the right tile sizes depend on
+shape, dtype, and hardware generation — FUnc-SNE's speedups (PAPERS.md)
+and Helion's entire design are built on the premise that tiles must be
+*searched*, not guessed.  This module is the small search harness ops.py
+consults whenever a caller leaves tile sizes unset:
+
+  * a **candidate list** of `KernelConfig`s (block_rows, block_cols,
+    layout, gather chunk) is generated per kernel kind, pruned to the
+    shapes that are legal for the request (hardware sublane multiples,
+    VMEM budget, divisibility constraints);
+  * each candidate is **timed** on synthetic inputs of the request's
+    shape bucket (one warmup to compile, then best-of-`reps` with
+    `block_until_ready`); candidates that fail to compile or run score
+    `inf` and are skipped;
+  * the winner is cached **in-process** under a key of
+    (kernel kind, shape bucket, dtype, device kind, interpret) and
+    optionally **on disk**: point `REPRO_AUTOTUNE_CACHE` at a JSON file
+    and every process that shares it skips the search (CI uploads the
+    file as an artifact so local runs can reuse a runner's winners).
+
+Shape bucketing rounds N up to the next power of two (saturating at a
+per-kernel cap so the synthetic search inputs stay affordable), so all
+Ns in a bucket share one config and the search runs once per bucket —
+the "at first dispatch" contract.  The first search wins: later calls
+with the same key return the cached config even if re-timing would now
+pick differently, which is what makes dispatch deterministic within and
+across processes (pinned in tests/test_kernels_autotune.py).
+
+ops.py supplies the `runner` that actually executes a candidate (it owns
+padding and kernel invocation); this module stays free of kernel imports
+so the dependency points one way.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import time
+from typing import Any, Callable, Sequence
+
+import jax
+
+# -- configuration record ------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """One point in the search space.
+
+    `layout` is kernel-specific: the ELL gather kernel has ``"vmem"``
+    (whole X resident in VMEM) and ``"hbm"`` (X stays in HBM, neighbor
+    rows DMA'd in double-buffered chunks of `chunk` rows); the pairwise
+    kernel only has its ``"tiled"`` streaming layout.  `block_cols` and
+    `chunk` are 0 when the kernel has no such axis.
+    """
+
+    block_rows: int
+    block_cols: int = 0
+    layout: str = "vmem"
+    chunk: int = 0
+
+    def to_json(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, obj: dict[str, Any]) -> "KernelConfig":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in obj.items() if k in fields})
+
+
+# -- cache ---------------------------------------------------------------------
+
+_CACHE: dict[str, KernelConfig] = {}
+_DISK_LOADED_FROM: str | None = None
+
+CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+
+
+def cache_path() -> str | None:
+    return os.environ.get(CACHE_ENV) or None
+
+
+def clear_cache() -> None:
+    """Drop the in-process cache (the disk file, if any, is untouched and
+    will be re-read on the next lookup)."""
+    global _DISK_LOADED_FROM
+    _CACHE.clear()
+    _DISK_LOADED_FROM = None
+
+
+def _load_disk() -> None:
+    """Merge the disk cache into the in-process one (in-process wins —
+    entries this process already searched or loaded stay put)."""
+    global _DISK_LOADED_FROM
+    path = cache_path()
+    if path is None or _DISK_LOADED_FROM == path:
+        return
+    _DISK_LOADED_FROM = path
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return
+    for key, obj in payload.get("entries", {}).items():
+        _CACHE.setdefault(key, KernelConfig.from_json(obj))
+
+
+def _save_disk() -> None:
+    """Atomically rewrite the disk cache as merge(file, in-process) so
+    concurrent processes lose at most their own last search, never the
+    file."""
+    path = cache_path()
+    if path is None:
+        return
+    entries: dict[str, Any] = {}
+    try:
+        with open(path) as f:
+            entries = json.load(f).get("entries", {})
+    except (OSError, json.JSONDecodeError):
+        pass
+    entries.update({k: v.to_json() for k, v in _CACHE.items()})
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".autotune.tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump({"version": 1, "entries": entries}, f, indent=1)
+        os.replace(tmp, path)
+    except OSError:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+
+
+# -- keying --------------------------------------------------------------------
+
+# search-input caps per kernel kind: the synthetic timing inputs are
+# O(bucket^2) for the pairwise kernel and O(bucket * k) for the ELL ones,
+# so buckets saturate where the search itself would get expensive.  Keys
+# saturate with them: every N above the cap shares the cap's config.
+_BUCKET_CAP = {"pairwise": 2048, "ell": 65536, "ell_local": 65536}
+_INTERPRET_BUCKET_CAP = {"pairwise": 512, "ell": 4096, "ell_local": 4096}
+
+
+def shape_bucket(kernel: str, n: int, interpret: bool) -> int:
+    cap = (_INTERPRET_BUCKET_CAP if interpret else _BUCKET_CAP).get(
+        kernel, 65536)
+    return min(cap, max(8, 1 << max(0, int(n - 1).bit_length())))
+
+
+def device_kind() -> str:
+    """A stable, filename-safe id for the accelerator the config is tuned
+    for (tile winners do not transfer across TPU generations)."""
+    try:
+        kind = jax.devices()[0].device_kind
+    except Exception:
+        kind = jax.default_backend()
+    return "".join(c if c.isalnum() else "-" for c in str(kind).lower())
+
+
+def cache_key(kernel: str, *, n: int, k: int = 0, d: int = 0,
+              dtype: str = "float32", interpret: bool = False) -> str:
+    b = shape_bucket(kernel, n, interpret)
+    mode = "interp" if interpret else "compiled"
+    return f"{kernel}:n{b}:k{k}:d{d}:{dtype}:{device_kind()}:{mode}"
+
+
+# -- candidate generation ------------------------------------------------------
+
+_ELL_BLOCK_ROWS = (64, 128, 256, 512, 1024)
+_PAIRWISE_TILES = ((128, 128), (256, 256), (512, 512), (128, 512),
+                   (512, 128))
+_HBM_CHUNKS = (8, 32)
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def ell_candidates(*, n: int, sublane: int, layouts: Sequence[str],
+                   interpret: bool) -> list[KernelConfig]:
+    """ELL gather candidates, legal for this request: block_rows are
+    sublane multiples clipped to the (bucketed) row count; the "hbm"
+    layout adds the double-buffer chunk size (a divisor of block_rows).
+    Interpret mode keeps the list short — its timings only order the
+    per-grid-step interpreter overhead, not real device behavior.  Both
+    modes always include the legacy fixed default (256) so the autotuned
+    pick can never lose to it (the kernel-bench acceptance check)."""
+    rows = (64, 128, 256) if interpret else _ELL_BLOCK_ROWS
+    out: list[KernelConfig] = []
+    for br in rows:
+        br = _round_up(min(br, max(sublane, n)), sublane)
+        for layout in layouts:
+            if layout == "vmem":
+                cfg = KernelConfig(block_rows=br, layout="vmem")
+                if cfg not in out:
+                    out.append(cfg)
+            else:
+                chunks = _HBM_CHUNKS[:1] if interpret else _HBM_CHUNKS
+                for chunk in chunks:
+                    chunk = min(chunk, br)
+                    while br % chunk:
+                        chunk -= 1
+                    cfg = KernelConfig(block_rows=br, layout="hbm",
+                                       chunk=chunk)
+                    if cfg not in out:
+                        out.append(cfg)
+    return out
+
+
+def pairwise_candidates(*, n: int, sublane: int,
+                        interpret: bool) -> list[KernelConfig]:
+    tiles = ((128, 128), (256, 256)) if interpret else _PAIRWISE_TILES
+    out: list[KernelConfig] = []
+    for br, bc in tiles:
+        br = _round_up(min(br, max(sublane, n)), sublane)
+        bc = _round_up(min(bc, max(sublane, n)), sublane)
+        cfg = KernelConfig(block_rows=br, block_cols=bc, layout="tiled")
+        if cfg not in out:
+            out.append(cfg)
+    return out
+
+
+# -- search --------------------------------------------------------------------
+
+
+def _time_once(fn: Callable[[], Any]) -> float:
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn())
+    return time.perf_counter() - t0
+
+
+def measure(fn: Callable[[], Any], reps: int = 3) -> float:
+    """Best-of-`reps` wall-clock of `fn` after one warmup (the warmup
+    absorbs compilation); `inf` when the candidate fails to run."""
+    try:
+        _time_once(fn)                      # warmup / compile
+        return min(_time_once(fn) for _ in range(max(1, reps)))
+    except Exception:
+        return float("inf")
+
+
+def get_config(
+    kernel: str,
+    *,
+    n: int,
+    k: int = 0,
+    d: int = 0,
+    dtype: str = "float32",
+    interpret: bool = False,
+    candidates: Sequence[KernelConfig],
+    runner: Callable[[KernelConfig, int], Callable[[], Any]],
+    reps: int = 3,
+) -> tuple[KernelConfig, bool]:
+    """The autotuned config for this request: cache hit or search.
+
+    `runner(cfg, bucket_n)` returns a zero-argument callable executing
+    the kernel once at the bucket's synthetic shape under `cfg` (ops.py
+    owns padding/invocation).  Returns ``(config, from_cache)``; the
+    search result is stored in-process and mirrored to the
+    `REPRO_AUTOTUNE_CACHE` file when set.  With every candidate scoring
+    `inf` (e.g. nothing compiles on this backend) the first candidate is
+    returned as a safe default — and cached, so the failure is paid once.
+    """
+    if not candidates:
+        raise ValueError(f"no candidates for kernel {kernel!r}")
+    key = cache_key(kernel, n=n, k=k, d=d, dtype=dtype, interpret=interpret)
+    _load_disk()
+    hit = _CACHE.get(key)
+    if hit is not None:
+        return hit, True
+
+    bucket = shape_bucket(kernel, n, interpret)
+    timings: list[tuple[float, int]] = []
+    for i, cfg in enumerate(candidates):
+        timings.append((measure(runner(cfg, bucket), reps=reps), i))
+    best_t, best_i = min(timings)
+    best = candidates[0] if best_t == float("inf") else candidates[best_i]
+    _CACHE[key] = best
+    _save_disk()
+    return best, False
+
+
+def cached_entries() -> dict[str, KernelConfig]:
+    """Snapshot of the in-process cache (for telemetry / the bench)."""
+    _load_disk()
+    return dict(_CACHE)

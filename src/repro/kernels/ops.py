@@ -1,41 +1,105 @@
-"""Jit'd dispatch wrappers around the fused pairwise kernel.
+"""Kernel dispatch: the one entry point per hot-path primitive.
 
-`pairwise_terms` is the single entry point the rest of the framework uses.
-On TPU it runs the Pallas kernel; on CPU it defaults to the jnp oracle
-(identical contract) unless the caller forces the kernel (tests run it in
-interpret mode).  Padding logic lives here so the kernel itself can assume
-aligned shapes:
+`pairwise_terms` and `ell_lap_matvec` are what the rest of the framework
+calls; each is a PLAIN Python dispatcher (decisions happen at call/trace
+time, outside any jit) wrapping jitted implementations:
 
-  * N is padded to a multiple of the block size with zero rows — zero
-    weights mean padded pairs contribute exactly 0 to every output (padded
-    X rows sit at the origin; their a/b weights are all zero).
-  * d is padded to `lane` columns of zeros — this changes no distance and
-    no output in the first d columns.
+  1. **Path**: Pallas vs the jnp oracle, decided by the `impl` knob
+     ('auto' | 'pallas' | 'pallas-interpret' | 'jnp'; the legacy
+     `use_pallas` bool still works) — 'auto' means Pallas on TPU, jnp
+     elsewhere.
+  2. **Layout + tiles**: when the caller leaves `block_rows` unset the
+     autotuner (autotune.py) times a candidate list at the request's
+     shape bucket and caches the winner; the ELL matvec additionally
+     picks its layout — whole-X-in-VMEM while X fits the VMEM budget
+     (`REPRO_VMEM_X_BUDGET`, default 8 MiB), the HBM-resident
+     double-buffered gather above it — so large N stays on Pallas
+     instead of silently falling back.
+  3. **Precision**: `storage_dtype="bfloat16"` stores X/weights in bf16
+     (halving resident-X VMEM and gather traffic — and doubling the
+     vmem-layout N cap) while every kernel accumulates in f32; outputs
+     are always f32.  The jnp path rounds through bf16 too, so both
+     paths see the same quantization.
 
-Observability: the public wrappers open a `repro.obs` span around kernel
-dispatch (`kernel/pairwise_terms`, `kernel/ell_lap_matvec`).  Because the
-wrappers are jitted (and usually traced inside a larger jitted program),
-the span fires at TRACE time — once per compiled shape — so what it
-records is dispatch/compile cost, not steady-state device time; per-call
-device timing belongs to `jax.profiler` (Telemetry(jax_annotations=True)).
-The span is a no-op (one contextvar read) when no tracer is active.
+Every decision is recorded — never silent:
+
+  * a `repro.obs` span (`kernel/pairwise_terms`, `kernel/ell_lap_matvec`)
+    carries `path`, `reason`, `layout`, and the chosen tile config as
+    span args (trace-time, once per compiled shape);
+  * an active telemetry recorder gets the same dict merged into its
+    `kernel_dispatch` meta (surfaced by `repro.obs.report`);
+  * `last_dispatch()` returns the most recent decision per kernel for
+    tests and benchmarks.
+
+Tile legality: requested/autotuned tile sizes are clamped to the row
+count and then rounded UP to the hardware sublane multiple (8 rows for
+f32, 16 for bf16), so small-N dispatch can never pick a misaligned tile;
+padding (zero rows / zero-weight self-edges — exact-zero contributions
+by construction, see the kernel modules) covers the remainder.
 """
 from __future__ import annotations
 
 import functools
+import math
+import os
 
 import jax
 import jax.numpy as jnp
 
-from repro.obs import span
+from repro.obs import current_tracer, span
 
+from . import autotune
+from .autotune import KernelConfig
 from .pairwise import pairwise_terms_pallas
 from .ref import KINDS, PairwiseTerms, ell_lap_matvec_ref, pairwise_terms_ref
-from .sparse_attractive import ell_lap_matvec_pallas
+from .sparse_attractive import (ell_lap_matvec_local_pallas,
+                                ell_lap_matvec_pallas,
+                                ell_lap_matvec_pallas_hbm)
+
+VMEM_X_BUDGET_ENV = "REPRO_VMEM_X_BUDGET"
+_DEFAULT_VMEM_X_BUDGET = 8 * 1024 * 1024   # bytes the resident-X layout may
+                                           # claim (~16k f32 rows at dp=128)
+
+IMPLS = ("auto", "pallas", "pallas-interpret", "jnp")
+STORAGE_DTYPES = ("float32", "bfloat16")
+
+_LAST: dict[str, dict] = {}
+
+
+def last_dispatch(kernel: str | None = None):
+    """The most recent dispatch decision (dict of path/reason/layout/
+    config), per kernel or the whole registry.  Decisions are recorded at
+    call/trace time — a cached XLA executable re-run does not re-dispatch."""
+    return dict(_LAST) if kernel is None else _LAST.get(kernel)
+
+
+def vmem_x_budget() -> int:
+    try:
+        return int(os.environ.get(VMEM_X_BUDGET_ENV,
+                                  _DEFAULT_VMEM_X_BUDGET))
+    except ValueError:
+        return _DEFAULT_VMEM_X_BUDGET
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def sublane(storage_dtype) -> int:
+    """Minimum legal row-tile multiple: the TPU sublane tiling is (8, 128)
+    for 4-byte types and (16, 128) for 2-byte types."""
+    return 16 if jnp.dtype(storage_dtype).itemsize == 2 else 8
+
+
+def legal_tile(requested: int, n: int, sub: int) -> int:
+    """Clamp a tile to the row count, then round UP to the sublane
+    multiple (the satellite fix: `min(block_rows, n)` alone hands the
+    kernel a misaligned tile whenever n is not a multiple of `sub`)."""
+    return _round_up(min(requested, max(sub, n)), sub)
 
 
 def _pad_to(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
@@ -45,91 +109,331 @@ def _pad_to(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
     return jnp.pad(x, ((0, pr), (0, pc)))
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("kind", "use_pallas", "block_rows", "block_cols", "interpret", "lane"),
-)
+def _resolve_impl(impl, use_pallas):
+    """Merge the new `impl` knob with the legacy `use_pallas` bool."""
+    if impl is None:
+        if use_pallas is None:
+            impl = "auto"
+        else:
+            impl = "pallas" if use_pallas else "jnp"
+    if impl not in IMPLS:
+        raise ValueError(f"unknown impl {impl!r}; have {IMPLS}")
+    return impl
+
+
+def _resolve_storage(storage_dtype):
+    if storage_dtype is None:
+        return "float32"
+    name = jnp.dtype(storage_dtype).name
+    if name not in STORAGE_DTYPES:
+        raise ValueError(
+            f"unsupported storage_dtype {name!r}; have {STORAGE_DTYPES}")
+    return name
+
+
+def _record(kernel: str, info: dict) -> None:
+    """Surface the dispatch decision: module registry + telemetry meta."""
+    _LAST[kernel] = info
+    tracer = current_tracer()
+    rec = getattr(tracer, "recorder", None) if tracer is not None else None
+    if rec is not None:
+        merged = dict(rec.meta.get("kernel_dispatch") or {})
+        merged[kernel] = info
+        rec.set_meta(kernel_dispatch=merged)
+
+
+def _maybe_bf16(x: jnp.ndarray, storage: str) -> jnp.ndarray:
+    """Round through the storage dtype so jnp and Pallas paths see the
+    same quantization; f32 storage leaves the input untouched."""
+    if storage == "bfloat16":
+        return x.astype(jnp.bfloat16)
+    return x
+
+
+# -- ELL Laplacian matvec --------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "storage"))
+def _pairwise_jnp(X, Wa, Wb, kind, storage):
+    if storage == "bfloat16":
+        X = X.astype(jnp.bfloat16).astype(jnp.float32)
+        Wa = Wa.astype(jnp.bfloat16).astype(jnp.float32)
+        Wb = Wb.astype(jnp.bfloat16).astype(jnp.float32)
+    return pairwise_terms_ref(X, Wa, Wb, kind)
+
+
+@functools.partial(jax.jit, static_argnames=("storage",))
+def _ell_jnp(X, indices, weights, storage):
+    if storage == "bfloat16":
+        X = X.astype(jnp.bfloat16).astype(jnp.float32)
+        weights = weights.astype(jnp.bfloat16).astype(jnp.float32)
+    return ell_lap_matvec_ref(X, indices, weights)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_rows", "layout", "chunk", "interpret", "lane", "storage"))
+def _ell_pallas(X, indices, weights, *, block_rows, layout, chunk,
+                interpret, lane, storage):
+    n, d = X.shape
+    n_pad = _round_up(n, block_rows)
+    dp = max(lane, d)
+    Xp = _pad_to(_maybe_bf16(X.astype(jnp.float32), storage), n_pad, dp)
+    idx_p = jnp.pad(indices.astype(jnp.int32), ((0, n_pad - n), (0, 0)))
+    w_p = _pad_to(_maybe_bf16(weights.astype(jnp.float32), storage),
+                  n_pad, weights.shape[1])
+    if layout == "hbm":
+        out = ell_lap_matvec_pallas_hbm(
+            Xp, idx_p, w_p, block_rows=block_rows, chunk=chunk,
+            interpret=interpret)
+    else:
+        out = ell_lap_matvec_pallas(
+            Xp, idx_p, w_p, block_rows=block_rows, interpret=interpret)
+    return out[:n, :d]
+
+
+def _ell_decide(n, k, d, impl, interpret, layout, storage, lane):
+    """(path, reason, layout, interpret) for an ELL matvec request."""
+    if impl == "jnp":
+        return "jnp", "forced-off", None, False
+    if impl == "auto":
+        if not _on_tpu():
+            return "jnp", "no-tpu", None, False
+        reason = "tpu-default"
+    else:
+        reason = "forced-on"
+    if interpret is None:
+        interpret = impl == "pallas-interpret" or not _on_tpu()
+    if layout is None:
+        itemsize = 2 if storage == "bfloat16" else 4
+        resident = _round_up(n, sublane(storage)) * max(lane, d) * itemsize
+        if resident > vmem_x_budget():
+            layout, reason = "hbm", "vmem-cap"
+        else:
+            layout = "vmem"
+    return "pallas", reason, layout, interpret
+
+
+def ell_lap_matvec(
+    X: jnp.ndarray,          # (N, d)
+    indices: jnp.ndarray,    # (N, k) int32
+    weights: jnp.ndarray,    # (N, k)
+    *,
+    impl: str | None = None,
+    use_pallas: bool | None = None,
+    block_rows: int | None = None,
+    layout: str | None = None,
+    chunk: int | None = None,
+    interpret: bool | None = None,
+    lane: int = 128,
+    storage_dtype=None,
+) -> jnp.ndarray:
+    """Directed ELL Laplacian product L(A) X; see kernels/ref.py for the
+    contract and the module docstring for the dispatch ladder.  Leave
+    `block_rows`/`layout`/`chunk` unset to let the autotuner pick them."""
+    impl = _resolve_impl(impl, use_pallas)
+    storage = _resolve_storage(storage_dtype)
+    n, d = X.shape
+    k = indices.shape[1]
+    path, reason, lay, interp = _ell_decide(
+        n, k, d, impl, interpret, layout, storage, lane)
+
+    if path == "jnp":
+        info = {"path": "jnp", "reason": reason, "storage": storage}
+        _record("ell_lap_matvec", info)
+        with span("kernel/ell_lap_matvec", n=n, k=k, **info):
+            return _ell_jnp(X, indices, weights, storage)
+
+    sub = sublane(storage)
+    autotuned = cache_hit = False
+    if block_rows is not None:
+        br = legal_tile(block_rows, n, sub)
+        ch = chunk if chunk is not None else min(8, br)
+        while br % ch:
+            ch -= 1
+    else:
+        cands = autotune.ell_candidates(
+            n=n, sublane=sub, layouts=[lay], interpret=interp)
+
+        def runner(cfg, bucket_n):
+            Xs = jnp.ones((bucket_n, d), jnp.float32)
+            idx = jnp.zeros((bucket_n, k), jnp.int32)
+            w = jnp.ones((bucket_n, k), jnp.float32)
+            return lambda: _ell_pallas(
+                Xs, idx, w, block_rows=cfg.block_rows, layout=cfg.layout,
+                chunk=cfg.chunk, interpret=interp, lane=lane,
+                storage=storage)
+
+        cfg, cache_hit = autotune.get_config(
+            "ell", n=n, k=k, d=d, dtype=storage, interpret=interp,
+            candidates=cands, runner=runner)
+        autotuned = True
+        br = legal_tile(cfg.block_rows, n, sub)
+        ch = cfg.chunk or min(8, br)
+        while br % ch:
+            ch -= 1
+
+    info = {"path": "pallas", "reason": reason, "layout": lay,
+            "storage": storage, "block_rows": br,
+            "chunk": ch if lay == "hbm" else 0, "interpret": interp,
+            "autotuned": autotuned, "cache_hit": cache_hit}
+    _record("ell_lap_matvec", info)
+    with span("kernel/ell_lap_matvec", n=n, k=k, **info):
+        return _ell_pallas(X, indices, weights, block_rows=br, layout=lay,
+                           chunk=ch, interpret=interp, lane=lane,
+                           storage=storage)
+
+
+# -- fused pairwise terms --------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kind", "block_rows", "block_cols", "interpret", "lane", "storage"))
+def _pairwise_pallas(X, Wa, Wb, *, kind, block_rows, block_cols, interpret,
+                     lane, storage):
+    n, d = X.shape
+    # N must be a multiple of BOTH tile sizes — lcm, not sequential
+    # rounding (which loses the first multiple for non-nested tile pairs)
+    n_pad = _round_up(n, math.lcm(block_rows, block_cols))
+    dp = max(lane, d)
+    Xp = _pad_to(_maybe_bf16(X.astype(jnp.float32), storage), n_pad, dp)
+    Wap = _pad_to(_maybe_bf16(Wa.astype(jnp.float32), storage),
+                  n_pad, n_pad)
+    Wbp = _pad_to(_maybe_bf16(Wb.astype(jnp.float32), storage),
+                  n_pad, n_pad)
+    t = pairwise_terms_pallas(
+        Xp, Wap, Wbp, kind,
+        block_rows=block_rows, block_cols=block_cols, interpret=interpret)
+    return PairwiseTerms(
+        la_x=t.la_x[:n, :d], lb_x=t.lb_x[:n, :d], e_plus=t.e_plus, s=t.s)
+
+
 def pairwise_terms(
     X: jnp.ndarray,
     Wa: jnp.ndarray,
     Wb: jnp.ndarray,
     kind: str,
     *,
+    impl: str | None = None,
     use_pallas: bool | None = None,
-    block_rows: int = 256,
-    block_cols: int = 256,
+    block_rows: int | None = None,
+    block_cols: int | None = None,
     interpret: bool | None = None,
     lane: int = 128,
+    storage_dtype=None,
 ) -> PairwiseTerms:
-    """Fused pairwise terms; see kernels/ref.py for the contract."""
+    """Fused pairwise terms; see kernels/ref.py for the contract and the
+    module docstring for the dispatch ladder."""
     if kind not in KINDS:
         raise ValueError(f"unknown kind {kind!r}")
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    with span("kernel/pairwise_terms", n=X.shape[0], kind=kind,
-              pallas=bool(use_pallas)):
-        if not use_pallas:
-            return pairwise_terms_ref(X, Wa, Wb, kind)
+    impl = _resolve_impl(impl, use_pallas)
+    storage = _resolve_storage(storage_dtype)
+    n, d = X.shape
 
-        if interpret is None:
-            interpret = not _on_tpu()
-        n, d = X.shape
-        br = min(block_rows, max(8, n))
-        bc = min(block_cols, max(8, n))
-        n_pad = -(-n // br) * br
-        n_pad = -(-n_pad // bc) * bc
-        dp = max(lane, d)
-        Xp = _pad_to(X.astype(jnp.float32), n_pad, dp)
-        Wap = _pad_to(Wa.astype(jnp.float32), n_pad, n_pad)
-        Wbp = _pad_to(Wb.astype(jnp.float32), n_pad, n_pad)
-        t = pairwise_terms_pallas(
-            Xp, Wap, Wbp, kind,
-            block_rows=br, block_cols=bc, interpret=interpret,
-        )
-        return PairwiseTerms(
-            la_x=t.la_x[:n, :d], lb_x=t.lb_x[:n, :d], e_plus=t.e_plus, s=t.s
-        )
+    if impl == "jnp" or (impl == "auto" and not _on_tpu()):
+        reason = "forced-off" if impl == "jnp" else "no-tpu"
+        info = {"path": "jnp", "reason": reason, "storage": storage}
+        _record("pairwise_terms", info)
+        with span("kernel/pairwise_terms", n=n, kind=kind, **info):
+            return _pairwise_jnp(X, Wa, Wb, kind, storage)
+
+    reason = "tpu-default" if impl == "auto" else "forced-on"
+    if interpret is None:
+        interpret = impl == "pallas-interpret" or not _on_tpu()
+    sub = sublane(storage)
+    autotuned = cache_hit = False
+    if block_rows is not None or block_cols is not None:
+        br = legal_tile(block_rows or 256, n, sub)
+        bc = legal_tile(block_cols or br, n, sub)
+    else:
+        cands = autotune.pairwise_candidates(
+            n=n, sublane=sub, interpret=interpret)
+
+        def runner(cfg, bucket_n):
+            Xs = jnp.ones((bucket_n, d), jnp.float32)
+            W = jnp.ones((bucket_n, bucket_n), jnp.float32)
+            return lambda: _pairwise_pallas(
+                Xs, W, W, kind=kind, block_rows=cfg.block_rows,
+                block_cols=cfg.block_cols, interpret=interpret, lane=lane,
+                storage=storage)
+
+        cfg, cache_hit = autotune.get_config(
+            "pairwise", n=n, d=d, dtype=storage, interpret=interpret,
+            candidates=cands, runner=runner)
+        autotuned = True
+        br = legal_tile(cfg.block_rows, n, sub)
+        bc = legal_tile(cfg.block_cols, n, sub)
+
+    info = {"path": "pallas", "reason": reason, "layout": "tiled",
+            "storage": storage, "block_rows": br, "block_cols": bc,
+            "interpret": interpret, "autotuned": autotuned,
+            "cache_hit": cache_hit}
+    _record("pairwise_terms", info)
+    with span("kernel/pairwise_terms", n=n, kind=kind, **info):
+        return _pairwise_pallas(X, Wa, Wb, kind=kind, block_rows=br,
+                                block_cols=bc, interpret=interpret,
+                                lane=lane, storage=storage)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("use_pallas", "block_rows", "interpret", "lane"),
-)
-def ell_lap_matvec(
-    X: jnp.ndarray,          # (N, d)
-    indices: jnp.ndarray,    # (N, k) int32
-    weights: jnp.ndarray,    # (N, k)
-    *,
-    use_pallas: bool | None = None,
-    block_rows: int = 256,
-    interpret: bool | None = None,
-    lane: int = 128,
-) -> jnp.ndarray:
-    """Directed ELL Laplacian product L(A) X; see kernels/ref.py for the
-    contract.  Padding mirrors `pairwise_terms`:
+# -- sharded local-rows ELL matvec -----------------------------------------------
 
-      * N is padded to a block multiple with zero-weight self-edge rows
-        (indices point at row 0, weights are 0 — exact-zero contribution
-        by the ELL padding invariant),
-      * d is padded to `lane` zero columns (changes nothing in the first
-        d output columns).
-    """
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    with span("kernel/ell_lap_matvec", n=X.shape[0], k=indices.shape[1],
-              pallas=bool(use_pallas)):
-        if not use_pallas:
-            return ell_lap_matvec_ref(X, indices, weights)
 
-        if interpret is None:
-            interpret = not _on_tpu()
-        n, d = X.shape
-        br = min(block_rows, max(8, n))
-        n_pad = -(-n // br) * br
-        dp = max(lane, d)
-        Xp = _pad_to(X.astype(jnp.float32), n_pad, dp)
-        idx_p = jnp.pad(indices.astype(jnp.int32), ((0, n_pad - n), (0, 0)))
-        w_p = _pad_to(weights.astype(jnp.float32), n_pad, weights.shape[1])
-        out = ell_lap_matvec_pallas(
-            Xp, idx_p, w_p, block_rows=br, interpret=interpret)
-        return out[:n, :d]
+def resolve_local_ell(nb: int, k: int, d: int, *, impl: str = "auto",
+                      storage_dtype=None, interpret: bool | None = None):
+    """Build-time dispatch for the shard_map-local ELL kernel
+    (sparse/sharding.py): returns ``None`` when the jnp per-shard gather
+    should be used, else a dict of static kwargs for
+    `ell_lap_matvec_local` — the decision must be made OUTSIDE the
+    shard_map trace, where the autotuner may still run eagerly.
+
+    `block_rows` is the autotuned pick rounded DOWN to a divisor of `nb`
+    (the local grid must tile the shard exactly, and the BlockSpec row
+    translation needs row0 % block_rows == 0 — sharding.py pads nb to a
+    sublane multiple)."""
+    impl = _resolve_impl(impl, None)
+    storage = _resolve_storage(storage_dtype)
+    if impl == "jnp" or (impl == "auto" and not _on_tpu()):
+        reason = "forced-off" if impl == "jnp" else "no-tpu"
+        _record("ell_lap_matvec_local",
+                {"path": "jnp", "reason": reason, "storage": storage})
+        return None
+    if interpret is None:
+        interpret = impl == "pallas-interpret" or not _on_tpu()
+    sub = sublane(storage)
+    cands = autotune.ell_candidates(
+        n=nb, sublane=sub, layouts=["vmem"], interpret=interpret)
+
+    def runner(cfg, bucket_n):
+        Xs = jnp.ones((bucket_n, max(128, d)), jnp.float32)
+        idx = jnp.zeros((bucket_n, k), jnp.int32)
+        w = jnp.ones((bucket_n, k), jnp.float32)
+        return lambda: ell_lap_matvec_local_pallas(
+            Xs, idx, w, 0, block_rows=cfg.block_rows, interpret=interpret)
+
+    cfg, cache_hit = autotune.get_config(
+        "ell_local", n=nb, k=k, d=d, dtype=storage, interpret=interpret,
+        candidates=cands, runner=runner)
+    br = min(legal_tile(cfg.block_rows, nb, sub), nb)
+    while nb % br:
+        br -= sub
+    info = {"path": "pallas", "reason": "forced-on" if impl != "auto"
+            else "tpu-default", "layout": "vmem", "storage": storage,
+            "block_rows": br, "interpret": interpret, "autotuned": True,
+            "cache_hit": cache_hit}
+    _record("ell_lap_matvec_local", info)
+    return {"block_rows": br, "interpret": interpret, "storage": storage}
+
+
+def ell_lap_matvec_local(X_rep, indices, weights, row0, *, block_rows,
+                         interpret, storage, lane: int = 128):
+    """Local rows of L(A) X inside a shard_map body, via the
+    scalar-prefetch translated kernel.  Static kwargs come from
+    `resolve_local_ell` (called at build time); this function is safe to
+    trace inside shard_map (no dispatch, no autotune)."""
+    d = X_rep.shape[1]
+    dp = max(lane, d)
+    Xk = _maybe_bf16(jnp.pad(X_rep, ((0, 0), (0, dp - d))), storage)
+    w = _maybe_bf16(weights, storage)
+    out = ell_lap_matvec_local_pallas(
+        Xk, indices.astype(jnp.int32), w, row0,
+        block_rows=block_rows, interpret=interpret)
+    return out[:, :d]

@@ -1,4 +1,4 @@
-"""Sparse attractive-term kernel (Pallas TPU): directed ELL Laplacian matvec.
+"""Sparse attractive-term kernels (Pallas TPU): directed ELL Laplacian matvec.
 
 Computes, per row tile, the gather half of the sparse attractive product
 (sparse/linalg.py):
@@ -9,36 +9,65 @@ for an ELL graph (indices (N, k), weights (N, k)).  The transpose half
 (A^T X, a scatter) stays in XLA — scatter has no fixed per-row arity to
 tile over, while the gather half is the regular-access hot path.
 
-TPU mapping (DESIGN.md §3.2 conventions carried over from pairwise.py):
+Three layouts of the same contract (ops.py picks one per dispatch, see
+docs/kernels.md):
+
+  * `ell_lap_matvec_pallas` — "vmem": X is additionally passed whole
+    (index map pinned to block (0, 0)) so neighbor rows gather straight
+    from VMEM.  Fastest when X fits the VMEM budget; caps N at ~16k rows
+    for f32 at the 128-lane d padding (twice that for bf16 storage).
+  * `ell_lap_matvec_pallas_hbm` — "hbm": X stays in HBM
+    (`memory_space=ANY`); the kernel DMAs each row tile's neighbor rows
+    into a double-buffered VMEM scratch, overlapping the next chunk's
+    copies with the current chunk's compute.  Lifts the VMEM cap — this
+    is what keeps Pallas serving N >> 16k instead of falling back to jnp.
+  * `ell_lap_matvec_local_pallas` — "vmem" over a REPLICATED X but only a
+    LOCAL row range of the graph: the variant `shard_map` bodies call
+    (sparse/sharding.py).  The global->local translation happens at the
+    BlockSpec level via a scalar-prefetch row-block offset, so the kernel
+    body is shared with the single-device vmem layout verbatim.
+
+Shared conventions (DESIGN.md §3.2, carried over from pairwise.py):
   * grid over row tiles; indices/weights/x-row tiles stream through VMEM,
-  * X is additionally passed whole (index map pinned to block (0, 0)) so
-    neighbor rows can be gathered from VMEM; this caps N at the VMEM
-    budget (~16k rows at the 128-lane d padding) — the HBM-resident
-    double-buffered DMA variant for larger N is a ROADMAP open item, and
-    benchmarks at N > VMEM-cap run the jnp path (ops.py dispatch),
-  * the row gather is a vector gather on the sublane axis
-    (jnp.take); Mosaic lowers it natively on recent toolchains,
+  * the row gather is a vector gather on the sublane axis (jnp.take);
+    Mosaic lowers it natively on recent toolchains,
+  * inputs may be stored in bf16 (mixed precision); every arithmetic path
+    upcasts AFTER the gather and accumulates in f32, and the output is
+    always f32,
   * embedding dim d is pre-padded to the lane width by ops.py; N is
     pre-padded to the tile size with zero-weight self-edge rows, which
     contribute exactly zero (the ELL padding invariant).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _space(name):
+    """Memory-space symbol across jax versions (pltpu.ANY/SMEM on 0.4.x;
+    newer releases move/alias them under pallas core)."""
+    v = getattr(pltpu, name, None)
+    return v if v is not None else getattr(pl, name)
 
 
 def _ell_kernel(idx_ref, w_ref, x_row_ref, x_all_ref, out_ref):
     idx = idx_ref[...]                                  # (TR, k) int32
     w = w_ref[...].astype(jnp.float32)                  # (TR, k)
     xi = x_row_ref[...].astype(jnp.float32)             # (TR, dp)
-    x_all = x_all_ref[...].astype(jnp.float32)          # (N, dp)
+    x_all = x_all_ref[...]                              # (N, dp) storage dtype
 
     tr, k = idx.shape
+    # gather in the storage dtype, upcast the gathered rows only: bf16
+    # storage halves both the resident-X VMEM footprint and the gather
+    # traffic, while every FLOP below runs in f32
     gathered = jnp.take(x_all, idx.reshape(-1), axis=0,
                         unique_indices=False, indices_are_sorted=False)
-    gathered = gathered.reshape(tr, k, x_all.shape[-1])
+    gathered = gathered.reshape(tr, k, x_all.shape[-1]).astype(jnp.float32)
     acc = jax.lax.dot_general(
         w[:, None, :], gathered, (((2,), (1,)), ((0,), (0,))),
         preferred_element_type=jnp.float32,
@@ -50,12 +79,12 @@ def _ell_kernel(idx_ref, w_ref, x_row_ref, x_all_ref, out_ref):
 def ell_lap_matvec_pallas(
     X: jnp.ndarray,          # (N, dp) — dp lane-padded by ops.py
     indices: jnp.ndarray,    # (N, k) int32
-    weights: jnp.ndarray,    # (N, k) float32
+    weights: jnp.ndarray,    # (N, k)
     *,
     block_rows: int = 256,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """Pallas implementation of ref.ell_lap_matvec_ref.
+    """Pallas implementation of ref.ell_lap_matvec_ref, vmem layout.
 
     Requires N % block_rows == 0 (ops.py pads with zero-weight self-edge
     rows) and X's last dim lane-padded."""
@@ -77,3 +106,141 @@ def ell_lap_matvec_pallas(
         out_shape=jax.ShapeDtypeStruct((n, dp), jnp.float32),
         interpret=interpret,
     )(indices, weights, X, X)
+
+
+def _ell_hbm_kernel(idx_ref, w_ref, x_row_ref, x_hbm_ref, out_ref, *,
+                    chunk: int):
+    """Double-buffered HBM gather: while chunk c's neighbor rows are being
+    reduced, chunk c+1's rows are already in flight into the other buffer
+    slot.  `idx_ref` lives in SMEM — DMA source addresses are scalars."""
+    tr, k = idx_ref.shape
+    dp = out_ref.shape[-1]
+    n_chunks = tr // chunk
+
+    def scoped(buf, sems):
+        # the DMA descriptor for (slot, chunk, row-in-chunk, neighbor) is
+        # reconstructed identically at start() and wait() — the Pallas
+        # async-copy contract
+        def copies(slot, c):
+            return [
+                pltpu.make_async_copy(
+                    x_hbm_ref.at[idx_ref[c * chunk + r, j]],
+                    buf.at[slot, r * k + j],
+                    sems.at[slot, r * k + j],
+                )
+                for r in range(chunk) for j in range(k)
+            ]
+
+        for cp in copies(0, 0):
+            cp.start()
+
+        def step(c, carry):
+            slot = jax.lax.rem(c, 2)
+
+            @pl.when(c + 1 < n_chunks)
+            def _prefetch():
+                for cp in copies(1 - slot, c + 1):
+                    cp.start()
+
+            for cp in copies(slot, c):
+                cp.wait()
+
+            g = buf[slot].reshape(chunk, k, dp).astype(jnp.float32)
+            w = w_ref[pl.ds(c * chunk, chunk), :].astype(jnp.float32)
+            xi = x_row_ref[pl.ds(c * chunk, chunk), :].astype(jnp.float32)
+            acc = jax.lax.dot_general(
+                w[:, None, :], g, (((2,), (1,)), ((0,), (0,))),
+                preferred_element_type=jnp.float32,
+            )[:, 0, :]
+            deg = jnp.sum(w, axis=-1, keepdims=True)
+            out_ref[pl.ds(c * chunk, chunk), :] = deg * xi - acc
+            return carry
+
+        jax.lax.fori_loop(0, n_chunks, step, 0)
+
+    pl.run_scoped(
+        scoped,
+        buf=_space("VMEM")((2, chunk * k, dp), x_hbm_ref.dtype),
+        sems=pltpu.SemaphoreType.DMA((2, chunk * k)),
+    )
+
+
+def ell_lap_matvec_pallas_hbm(
+    X: jnp.ndarray,          # (N, dp) — stays in HBM
+    indices: jnp.ndarray,    # (N, k) int32
+    weights: jnp.ndarray,    # (N, k)
+    *,
+    block_rows: int = 256,
+    chunk: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """HBM-resident layout: same contract as `ell_lap_matvec_pallas`, but
+    X never enters VMEM whole — per chunk of `chunk` rows, the chunk*k
+    neighbor rows are DMA'd into a (2, chunk*k, dp) double buffer.  VMEM
+    use is O(block_rows * (k + dp) + chunk * k * dp), independent of N."""
+    n, dp = X.shape
+    assert n % block_rows == 0, (n, block_rows)
+    assert block_rows % chunk == 0, (block_rows, chunk)
+    k = indices.shape[1]
+
+    return pl.pallas_call(
+        functools.partial(_ell_hbm_kernel, chunk=chunk),
+        grid=(n // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0),
+                         memory_space=_space("SMEM")),
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, dp), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=_space("ANY")),
+        ],
+        out_specs=pl.BlockSpec((block_rows, dp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, dp), jnp.float32),
+        interpret=interpret,
+    )(indices, weights, X, X)
+
+
+def _ell_local_kernel(s_ref, idx_ref, w_ref, x_row_ref, x_all_ref, out_ref):
+    del s_ref  # consumed by the x_row index map only
+    _ell_kernel(idx_ref, w_ref, x_row_ref, x_all_ref, out_ref)
+
+
+def ell_lap_matvec_local_pallas(
+    X_rep: jnp.ndarray,      # (n_rep, dp) — REPLICATED, lane-padded
+    indices: jnp.ndarray,    # (nb, k) int32 — LOCAL graph rows, global ids
+    weights: jnp.ndarray,    # (nb, k)
+    row0,                    # global row offset of this shard (traced OK)
+    *,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Local rows of L(A) X inside a shard_map body: the graph arrays are
+    this shard's nb rows, X is the full replicated array, and the output
+    is the local (nb, dp) slab.
+
+    The global->local index translation happens at the BlockSpec level:
+    `row0` rides in as a scalar-prefetch argument, and the x_row index map
+    offsets every grid step by `row0 / block_rows` — so the kernel body is
+    `_ell_kernel` verbatim, and `row0 % block_rows == 0` is required
+    (sparse/sharding.py sizes shards so block_rows divides nb)."""
+    nb, k = indices.shape
+    n_rep, dp = X_rep.shape
+    assert nb % block_rows == 0, (nb, block_rows)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, k), lambda i, s: (i, 0)),
+            pl.BlockSpec((block_rows, k), lambda i, s: (i, 0)),
+            pl.BlockSpec((block_rows, dp), lambda i, s: (s[0] + i, 0)),
+            pl.BlockSpec((n_rep, dp), lambda i, s: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, dp), lambda i, s: (i, 0)),
+    )
+    block0 = (jnp.asarray(row0, jnp.int32) // block_rows).reshape(1)
+    return pl.pallas_call(
+        _ell_local_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nb, dp), jnp.float32),
+        interpret=interpret,
+    )(block0, indices, weights, X_rep, X_rep)

@@ -31,6 +31,28 @@ else:  # pragma: no cover - exercised on old jax only
     from jax.experimental.shard_map import shard_map
 
 
+def shard_map_norep(f, *, mesh, in_specs, out_specs):
+    """`shard_map` with replication checking disabled — `pallas_call` has
+    no replication rule, so kernel-bearing bodies (sparse/sharding.py with
+    the local-rows ELL kernel) cannot pass the check.  The kwarg was
+    renamed `check_rep` -> `check_vma` around jax 0.6; probe the signature
+    so both spellings work.  Only kernel-bearing bodies should use this —
+    plain jnp bodies keep the default checking."""
+    import inspect
+
+    try:
+        params = inspect.signature(shard_map).parameters
+    except (TypeError, ValueError):  # pragma: no cover - exotic wrappers
+        params = {}
+    kw = {}
+    if "check_vma" in params:
+        kw["check_vma"] = False
+    elif "check_rep" in params:
+        kw["check_rep"] = False
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     **kw)
+
+
 def axis_size(ax: str):
     """jax.lax.axis_size is a recent addition; psum(1) is the portable
     spelling of "size of this named axis" inside shard_map."""

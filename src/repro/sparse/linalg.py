@@ -83,18 +83,20 @@ def sym_lap_matvec(g: NeighborGraph, X: Array,
 
 
 def make_sd_operator(g: NeighborGraph, rev: NeighborGraph | None,
-                     mu_scale: float = 1e-5):
+                     mu_scale: float = 1e-5, **impl):
     """(matvec, inv_diag, mu) for the sparse spectral-direction system
     B = 4 L((A + A^T)/2) + mu I — the one place the jitter formula and
     Jacobi diagonal live for the pure-sparse case (trainer, benchmarks).
     core.strategies.SparseSD generalizes this with the full-degree
-    residual shift for dense-kappa conversions."""
+    residual shift for dense-kappa conversions.  `impl` kwargs (e.g.
+    ``impl="pallas"``, ``storage_dtype="bfloat16"``) are forwarded to the
+    kernel dispatcher for every matvec — this is the CG hot path."""
     bd = 4.0 * sym_degree(g)
     mu = jnp.maximum(1e-10 * jnp.min(bd), mu_scale * jnp.mean(bd))
     inv_diag = 1.0 / (bd + mu)
 
     def matvec(V):
-        return 4.0 * sym_lap_matvec(g, V, rev=rev) + mu * V
+        return 4.0 * sym_lap_matvec(g, V, rev=rev, **impl) + mu * V
 
     return matvec, inv_diag, mu
 

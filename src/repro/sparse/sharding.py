@@ -50,7 +50,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.objectives import (attractive_edge_terms, directed_lap_apply,
                                    is_normalized, negative_pair_terms)
-from repro.launch.mesh import linear_row_index, shard_map
+from repro.kernels import ops
+from repro.launch.mesh import linear_row_index, shard_map, shard_map_norep
 from repro.obs import span
 
 from .graph import SparseAffinities, reverse_graph
@@ -105,7 +106,10 @@ def shard_sparse_affinities(mesh: Mesh, row_axes: tuple[str, ...],
     rev = saff.rev if saff.rev is not None else reverse_graph(g)
     n = g.n
     groups = _row_groups(mesh, row_axes)
+    # per-shard rows rounded up to the hardware sublane multiple, so the
+    # local-rows ELL kernel always has a legal, nb-dividing tile available
     nb = -(-n // groups)
+    nb = -(-nb // 8) * 8
     n_pad = nb * groups
     spec = NamedSharding(mesh, P(row_axes, None))
 
@@ -132,10 +136,33 @@ def _directed_lap_local(xi, Xp, idx, w):
     return directed_lap_apply(w, xi, Xp[idx])
 
 
+def _local_lap_fn(nb: int, k: int, kernel_impl: str, kernel_precision: str,
+                  kernel_lane: int):
+    """(lap, kernel_active): the per-shard directed-Laplacian closure —
+    either the jnp gather or the scalar-prefetch-translated Pallas kernel
+    (kernels.ops.ell_lap_matvec_local).  Dispatch (autotune included)
+    runs HERE, at build time, outside the shard_map trace; the closure
+    traced inside the body carries only static config."""
+    kw = ops.resolve_local_ell(nb, k, 0, impl=kernel_impl,
+                               storage_dtype=kernel_precision)
+    if kw is None:
+        return (lambda xi, Xp, idx, w, row0:
+                _directed_lap_local(xi, Xp, idx, w)), False
+
+    def lap(xi, Xp, idx, w, row0):
+        return ops.ell_lap_matvec_local(Xp, idx, w, row0,
+                                        lane=kernel_lane, **kw)
+
+    return lap, True
+
+
 def make_sharded_energy_grad(mesh: Mesh, row_axes: tuple[str, ...],
                              sg: ShardedSparseGraph, kind: str,
                              n_negatives: int | None = 5,
-                             z_decay: float = 0.9):
+                             z_decay: float = 0.9,
+                             kernel_impl: str = "auto",
+                             kernel_precision: str = "float32",
+                             kernel_lane: int = 128):
     """Jitted sharded energy/gradient closures for EVERY model family.
 
     Unnormalized kinds (ee/tee/epan): `eg(X, lam, key) -> (E, G)` and
@@ -153,12 +180,25 @@ def make_sharded_energy_grad(mesh: Mesh, row_axes: tuple[str, ...],
     Both closures numerically match the single-device
     `energy_and_grad_sparse` on the same graph, PRNG key and z_prev (same
     shift draw, same per-pair math; only partial-sum order differs).
+
+    `kernel_impl`/`kernel_precision` select the per-shard Laplacian
+    implementation (docs/kernels.md): with the local-rows Pallas kernel
+    active the attractive symmetrization halves run through
+    `kernels.ops.ell_lap_matvec_local` (dispatch + autotune resolved at
+    build time, outside the shard_map trace) and the shard_map drops
+    replication checking (`pallas_call` has no replication rule).
     """
     negative_pair_terms(kind, jnp.zeros(()))  # reject bad kinds at build
     normalized = is_normalized(kind)
     n, n_pad = sg.n, sg.n_pad
     all_axes = tuple(mesh.axis_names)
     exhaustive = n_negatives is None or n_negatives >= n - 1
+    nb_shard = n_pad // _row_groups(mesh, row_axes)
+    lap_local, kernel_active = _local_lap_fn(
+        nb_shard, sg.indices.shape[1], kernel_impl, kernel_precision,
+        kernel_lane)
+    smap = functools.partial(
+        shard_map_norep if kernel_active else shard_map, mesh=mesh)
 
     # named_scope tags the per-shard epoch body in XLA/HLO metadata, so
     # `jax.profiler` traces (obs.Telemetry(jax_annotations=True)) attribute
@@ -213,11 +253,11 @@ def make_sharded_energy_grad(mesh: Mesh, row_axes: tuple[str, ...],
             arw = attractive_edge_terms(
                 kind, rw,
                 jnp.sum((xi[:, None, :] - Xp[ridx]) ** 2, axis=-1))[1]
-            la_x = 0.5 * (_directed_lap_local(xi, Xp, idx, aw)
-                          + _directed_lap_local(xi, Xp, ridx, arw))
+            la_x = 0.5 * (lap_local(xi, Xp, idx, aw, row0)
+                          + lap_local(xi, Xp, ridx, arw, row0))
         else:
-            la_x = 0.5 * (_directed_lap_local(xi, Xp, idx, w)
-                          + _directed_lap_local(xi, Xp, ridx, rw))
+            la_x = 0.5 * (lap_local(xi, Xp, idx, w, row0)
+                          + lap_local(xi, Xp, ridx, rw, row0))
 
         # reverse negative half: the transpose of shift +s_j is shift -s_j
         # at the SAME per-edge weight, which is a pure function of the
@@ -239,13 +279,13 @@ def make_sharded_energy_grad(mesh: Mesh, row_axes: tuple[str, ...],
 
     ell_specs = (P(row_axes, None),) * 4
     scalar_specs = (P(), P(), P(), P(), P())
-    smap_eg = shard_map(
-        functools.partial(body, True), mesh=mesh,
+    smap_eg = smap(
+        functools.partial(body, True),
         in_specs=scalar_specs + ell_specs,
         out_specs=(P(), P(), P()) if normalized else (P(), P()),
     )
-    smap_e = shard_map(
-        functools.partial(body, False), mesh=mesh,
+    smap_e = smap(
+        functools.partial(body, False),
         in_specs=scalar_specs + ell_specs,
         out_specs=P(),
     )
@@ -290,7 +330,10 @@ def make_sharded_energy_grad(mesh: Mesh, row_axes: tuple[str, ...],
 def make_sharded_sd_operator(mesh: Mesh, row_axes: tuple[str, ...],
                              sg: ShardedSparseGraph,
                              saff: SparseAffinities,
-                             mu_scale: float = 1e-5):
+                             mu_scale: float = 1e-5,
+                             kernel_impl: str = "auto",
+                             kernel_precision: str = "float32",
+                             kernel_lane: int = 128):
     """(matvec, inv_diag, mu) for B = 4 L((A + Aᵀ)/2) + mu I with the
     Laplacian application row-sharded.
 
@@ -298,10 +341,17 @@ def make_sharded_sd_operator(mesh: Mesh, row_axes: tuple[str, ...],
     on the UNSHARDED graph (a build-time scatter is fine), so the sharded
     CG solves the bit-identical system; only the single-device matvec is
     discarded.  The per-iteration matvec is shard_mapped: local gathers
-    for both halves, one O(N d) psum to re-replicate."""
+    for both halves, one O(N d) psum to re-replicate.  This is the CG
+    hot path — `kernel_impl`/`kernel_precision` put both halves on the
+    local-rows Pallas kernel (dispatch resolved at build time, see
+    `make_sharded_energy_grad`)."""
     _, inv_diag, mu = make_sd_operator(saff.graph, saff.rev, mu_scale)
     n, n_pad = sg.n, sg.n_pad
     all_axes = tuple(mesh.axis_names)
+    nb_shard = n_pad // _row_groups(mesh, row_axes)
+    lap_local, kernel_active = _local_lap_fn(
+        nb_shard, sg.indices.shape[1], kernel_impl, kernel_precision,
+        kernel_lane)
 
     @jax.named_scope("sharded-sd-matvec")
     def body(Vp, idx, w, ridx, rw):
@@ -309,13 +359,13 @@ def make_sharded_sd_operator(mesh: Mesh, row_axes: tuple[str, ...],
         row0 = linear_row_index(row_axes) * nb
         vi = jax.lax.dynamic_slice_in_dim(Vp, row0, nb, 0)
         # 4 * 0.5 * (L(A) V + L(A^T) V)
-        out_loc = 2.0 * (_directed_lap_local(vi, Vp, idx, w)
-                         + _directed_lap_local(vi, Vp, ridx, rw))
+        out_loc = 2.0 * (lap_local(vi, Vp, idx, w, row0)
+                         + lap_local(vi, Vp, ridx, rw, row0))
         out = jnp.zeros_like(Vp)
         out = jax.lax.dynamic_update_slice_in_dim(out, out_loc, row0, 0)
         return jax.lax.psum(out, all_axes)
 
-    smap = shard_map(
+    smap = (shard_map_norep if kernel_active else shard_map)(
         body, mesh=mesh,
         in_specs=(P(),) + (P(row_axes, None),) * 4,
         out_specs=P(),

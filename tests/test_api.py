@@ -58,6 +58,46 @@ def test_spec_strategy_aliases():
     assert EmbedSpec(strategy="L-BFGS").strategy == "lbfgs"
 
 
+def test_spec_rejects_unknown_kernel_knobs():
+    with pytest.raises(ValueError, match="kernel_impl"):
+        EmbedSpec(kernel_impl="cuda")
+    with pytest.raises(ValueError, match="kernel_precision"):
+        EmbedSpec(kernel_precision="float16")
+
+
+def test_spec_kernel_args_empty_at_defaults():
+    """Default kernel knobs forward NOTHING, keeping legacy call paths
+    byte-identical (the bit-for-bit parity tests below depend on it)."""
+    assert EmbedSpec().kernel_args() == {}
+    assert EmbedSpec(kernel_impl="jnp").kernel_args() == {"impl": "jnp"}
+    assert EmbedSpec(kernel_precision="bfloat16").kernel_args() == \
+        {"storage_dtype": "bfloat16"}
+
+
+def test_dense_fit_through_interpret_kernel(problem):
+    """EmbedSpec.kernel_impl routes the dense objective's pairwise terms
+    through the Pallas (interpret) kernel; trajectories track the jnp
+    path to f32 accumulation noise, and bf16 storage runs end-to-end."""
+    from repro.kernels import ops
+
+    Y, aff, X0 = problem
+    base = EmbedSpec(kind="ee", lam=50.0, strategy="sd", backend="dense",
+                     max_iters=3, tol=0.0)
+    r0 = Embedding(base).fit(None, X0=X0, aff=aff).result_
+    rk = Embedding(base.replace(kernel_impl="pallas-interpret")).fit(
+        None, X0=X0, aff=aff).result_
+    np.testing.assert_allclose(rk.energies, r0.energies, rtol=1e-4)
+    disp = ops.last_dispatch("pairwise_terms")
+    assert disp["path"] == "pallas" and disp["reason"] == "forced-on"
+
+    rb = Embedding(base.replace(kernel_impl="pallas-interpret",
+                                kernel_precision="bfloat16")).fit(
+        None, X0=X0, aff=aff).result_
+    assert np.isfinite(rb.energies).all()
+    assert rb.energies[-1] < rb.energies[0]
+    assert ops.last_dispatch("pairwise_terms")["storage"] == "bfloat16"
+
+
 def test_embedconfig_rejects_unknown_names():
     from repro.embed import EmbedConfig
 

@@ -65,6 +65,26 @@ def test_kernel_bf16_inputs(kind):
     assert rel < 2e-2  # bf16 input quantization
 
 
+def test_storage_bf16_matches_jnp_bf16_path():
+    """bf16 STORAGE (EmbedSpec.kernel_precision): both paths quantize
+    inputs through bf16 and accumulate in f32, so they agree up to
+    accumulation-order noise; the f32 oracle is within bf16 distance."""
+    X, Wa, Wb = _rand_problem(4, 48, 2)
+    p = ops.pairwise_terms(X, Wa, Wb, "ee", impl="pallas-interpret",
+                           block_rows=16, block_cols=16, lane=8,
+                           storage_dtype="bfloat16")
+    j = ops.pairwise_terms(X, Wa, Wb, "ee", impl="jnp",
+                           storage_dtype="bfloat16")
+    np.testing.assert_allclose(np.asarray(p.la_x), np.asarray(j.la_x),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(p.e_plus), float(j.e_plus), rtol=1e-3)
+    r = pairwise_terms_ref(X, Wa, Wb, "ee")
+    rel = float(jnp.linalg.norm(p.la_x - r.la_x) /
+                (jnp.linalg.norm(r.la_x) + 1e-30))
+    assert rel < 2e-2
+    assert ops.last_dispatch("pairwise_terms")["storage"] == "bfloat16"
+
+
 @settings(max_examples=10, deadline=None)
 @given(
     seed=st.integers(0, 10_000),

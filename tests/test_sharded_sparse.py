@@ -166,6 +166,89 @@ def test_multi_device_sharded_sparse():
     assert "SUBPROCESS_OK" in out.stdout
 
 
+# the local-rows Pallas kernel (kernels/ops.ell_lap_matvec_local) inside
+# shard_map bodies: energy/grad + SD-operator parity against the jnp
+# per-shard gather on a real 8-device mesh, f32 exact and bf16 within
+# storage-rounding distance
+_KERNEL_SUBPROCESS_PROG = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    from repro.launch.mesh import axis_types_kwargs
+    from repro.kernels import ops
+    from repro.sparse import (make_sharded_energy_grad,
+                              make_sharded_sd_operator,
+                              shard_sparse_affinities, sparse_affinities)
+    assert len(jax.devices()) == 8
+    mesh = jax.make_mesh((8, 1), ("data", "model"), **axis_types_kwargs(2))
+
+    n = 50                    # ragged: exercises row + sublane padding
+    Y = jax.random.normal(jax.random.PRNGKey(0), (n, 6))
+    X = jax.random.normal(jax.random.PRNGKey(1), (n, 2)) * 0.5
+    key = jax.random.PRNGKey(7)
+
+    def rel(a, b):
+        return float(jnp.linalg.norm(a - b) / (jnp.linalg.norm(a) + 1e-30))
+
+    for kind, lam in [("ee", 50.0), ("tsne", 2.0)]:
+        saff = sparse_affinities(Y, k=10, perplexity=3.0, model=kind)
+        sg = shard_sparse_affinities(mesh, ("data",), saff)
+        eg_j, _ = make_sharded_energy_grad(mesh, ("data",), sg, kind,
+                                           n_negatives=5)
+        eg_k, _ = make_sharded_energy_grad(mesh, ("data",), sg, kind,
+                                           n_negatives=5,
+                                           kernel_impl="pallas-interpret")
+        disp = ops.last_dispatch("ell_lap_matvec_local")
+        assert disp["path"] == "pallas" and disp["reason"] == "forced-on", \\
+            disp
+        if kind == "tsne":
+            E1, G1, z1 = eg_j(X, lam, key, jnp.zeros(()))
+            E2, G2, z2 = eg_k(X, lam, key, jnp.zeros(()))
+            assert abs(float(z1 - z2)) / abs(float(z1)) < 1e-5
+        else:
+            E1, G1 = eg_j(X, lam, key)
+            E2, G2 = eg_k(X, lam, key)
+        relE = abs(float(E1 - E2)) / abs(float(E1))
+        relG = rel(G1, G2)
+        assert relE < 1e-5 and relG < 1e-5, (kind, relE, relG)
+
+        # bf16 storage: within bf16 rounding of the f32 path
+        eg_b, _ = make_sharded_energy_grad(mesh, ("data",), sg, kind,
+                                           n_negatives=5,
+                                           kernel_impl="pallas-interpret",
+                                           kernel_precision="bfloat16")
+        out_b = eg_b(X, lam, key) if kind != "tsne" else \\
+            eg_b(X, lam, key, jnp.zeros(()))
+        relGb = rel(G1, out_b[1])
+        assert relGb < 5e-2, (kind, relGb)
+
+    # SD operator through the kernel
+    saff = sparse_affinities(Y, k=10, perplexity=3.0, model="ee")
+    sg = shard_sparse_affinities(mesh, ("data",), saff)
+    mv1, d1, mu1 = make_sharded_sd_operator(mesh, ("data",), sg, saff,
+                                            1e-5)
+    mv2, d2, mu2 = make_sharded_sd_operator(mesh, ("data",), sg, saff,
+                                            1e-5,
+                                            kernel_impl="pallas-interpret")
+    V = jax.random.normal(jax.random.PRNGKey(3), (n, 2))
+    r = rel(mv1(V), mv2(V))
+    assert r < 1e-5, r
+    print("SUBPROCESS_OK")
+""")
+
+
+def test_multi_device_sharded_kernel_parity():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _KERNEL_SUBPROCESS_PROG],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SUBPROCESS_OK" in out.stdout
+
+
 # -- in-process checks on the (1, 1) mesh ---------------------------------------
 
 
