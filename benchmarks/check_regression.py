@@ -52,6 +52,24 @@ checks gate unconditionally when the section is present:
     correctness-above-the-VMEM-cap acceptance check).
 
 As everywhere else, a missing kernels section or baseline only warns.
+
+Serve gate (`--serve-baseline results/serve.json`): the bench's "serve"
+section (benchmarks/serve_bench.py) carries the transform server's
+concurrent-load latency percentiles and two correctness bits.  The
+correctness bits gate UNCONDITIONALLY whenever the section is present:
+
+  * `max_abs_err` (served responses vs one direct `Embedding.transform`
+    over the same queries) must be <= 1e-5 — the rowwise solver's
+    batch-composition invariance is what licenses micro-batching, so any
+    drift here is a correctness bug, not noise, and
+  * `roundtrip_bitexact` must be true — `save()`/`load()` must preserve
+    the training embedding bit-for-bit.
+
+p50/p99 are diffed against the committed baseline under the
+SERVE_LATENCY_THRESHOLD env var (default 3.0 — shared-runner serving
+latency is far noisier than per-iteration fit timings, and the absolute
+numbers are milliseconds).  A missing serve section or baseline only
+warns.
 """
 from __future__ import annotations
 
@@ -203,6 +221,56 @@ def check_kernels(bench: dict, baseline_path: str | None, threshold: float,
     return failures
 
 
+def check_serve(bench: dict, baseline_path: str | None,
+                latency_threshold: float) -> int:
+    """Correctness + latency gate over the bench's "serve" section.
+    Returns the number of failures; missing data only warns (the gate
+    must be able to land before its baseline exists)."""
+    srv = bench.get("serve")
+    if not isinstance(srv, dict) or not srv:
+        print("serve-gate: WARNING — bench has no serve section; skipped")
+        return 0
+    failures = 0
+
+    err = srv.get("max_abs_err")
+    if err is not None:
+        ok = float(err) <= 1e-5
+        failures += not ok
+        print(f"serve-gate: max_abs_err {float(err):.2e} (<= 1e-5)  "
+              f"{'ok' if ok else 'FAIL'}")
+    else:
+        print("serve-gate: WARNING — no max_abs_err; parity check skipped")
+    bit = srv.get("roundtrip_bitexact")
+    if bit is not None:
+        failures += not bool(bit)
+        print(f"serve-gate: roundtrip_bitexact {bool(bit)}  "
+              f"{'ok' if bit else 'FAIL'}")
+    else:
+        print("serve-gate: WARNING — no roundtrip_bitexact; skipped")
+
+    base = {}
+    if baseline_path:
+        try:
+            with open(baseline_path) as f:
+                base = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"serve-gate: WARNING — no usable baseline at "
+                  f"{baseline_path} ({e}); latency comparison skipped")
+    for metric in ("p50_ms", "p99_ms"):
+        v, b = srv.get(metric), base.get(metric)
+        if v is None or b is None:
+            if v is not None:
+                print(f"serve-gate: {metric} {float(v):.1f}ms  no-baseline")
+            continue
+        ratio = float(v) / max(float(b), 1e-12)
+        status = "REGRESSION" if ratio > latency_threshold else "ok"
+        failures += status == "REGRESSION"
+        print(f"serve-gate: {metric} base {float(b):.1f}ms new "
+              f"{float(v):.1f}ms ratio {ratio:.2f} "
+              f"(<= {latency_threshold:.2f})  {status}")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--bench", default="BENCH_smoke.json")
@@ -226,6 +294,14 @@ def main() -> int:
     ap.add_argument("--autotune-threshold", type=float,
                     default=float(os.environ.get(
                         "KERNEL_AUTOTUNE_THRESHOLD", 1.4)))
+    ap.add_argument("--serve-baseline", default=None,
+                    help="committed results/serve.json to diff the bench's "
+                         "serve section p50/p99 against; omitting it skips "
+                         "the latency diff but still enforces the parity "
+                         "and round-trip self-checks")
+    ap.add_argument("--serve-latency-threshold", type=float,
+                    default=float(os.environ.get(
+                        "SERVE_LATENCY_THRESHOLD", 3.0)))
     a = ap.parse_args()
 
     with open(a.bench) as f:
@@ -250,6 +326,8 @@ def main() -> int:
                                    a.threshold, a.overhead_threshold)
     kern_failures = check_kernels(bench, a.kernels_baseline, a.threshold,
                                   a.autotune_threshold)
+    serve_failures = check_serve(bench, a.serve_baseline,
+                                 a.serve_latency_threshold)
 
     compared = [r for r in rows if r[3] is not None]
     if not compared:
@@ -263,7 +341,10 @@ def main() -> int:
               f"out of budget")
     if kern_failures:
         print(f"kernel-gate: FAIL — {kern_failures} kernel check(s) failed")
-    if regressions or tel_failures or kern_failures:
+    if serve_failures:
+        print(f"serve-gate: FAIL — {serve_failures} serving check(s) "
+              f"failed")
+    if regressions or tel_failures or kern_failures or serve_failures:
         return 1
     if compared:
         print(f"bench-regression: OK — {len(compared)} timing(s) within "

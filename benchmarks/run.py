@@ -17,7 +17,8 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import (fig1_learning_curves, fig2_random_inits,
                         fig3_homotopy, fig4_large, fig5_sparse_scaling,
-                        kernel_bench, sd_overhead, telemetry_smoke)
+                        kernel_bench, sd_overhead, serve_bench,
+                        telemetry_smoke)
 
 
 def main() -> None:
@@ -54,10 +55,16 @@ def main() -> None:
         # against results/kernels.json and checks autotuned <= fixed
         res_k = kernel_bench.run(ns=(512, 1024), pairwise_ns=(256,),
                                  hbm_n=512, out_json="results/kernels.json")
+        # serving path: artifact round-trip + concurrent transform server;
+        # the gate checks max_abs_err/bit-exactness unconditionally and
+        # diffs p50/p99 against the committed results/serve.json baseline
+        res_srv = serve_bench.run(n=512, n_queries=48, iters=20,
+                                  transform_iters=15,
+                                  out_json="results/serve.json")
         import jax
         with open(a.bench_out, "w") as f:
             json.dump({"fig5": res5, "telemetry": res_tel,
-                       "kernels": res_k,
+                       "kernels": res_k, "serve": res_srv,
                        "meta": {"jax": jax.__version__,
                                 "devices": len(jax.devices()),
                                 "unix_time": time.time()}}, f)
@@ -95,6 +102,7 @@ def main() -> None:
                                 dense_cutoff=2000, models=("ee", "tsne"),
                                 out_json="results/fig5.json")
         kernel_bench.run(out_json="results/kernels.json")
+        serve_bench.run(out_json="results/serve.json")
     # roofline table if a dry-run sweep exists
     if os.path.exists("results/dryrun.jsonl"):
         from benchmarks import roofline_report

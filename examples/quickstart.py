@@ -1,12 +1,13 @@
-"""Quickstart: embed a swiss roll with the spectral direction, then place
-NEW points on the trained map without re-fitting — all through the one
-public estimator (`repro.api.Embedding`).
+"""Quickstart: embed a swiss roll with the spectral direction, save the
+fitted map as a versioned artifact, load it back, and place NEW points on
+the trained map without re-fitting — all through the one public estimator
+(`repro.api.Embedding`).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
 
-from repro.api import Embedding, EmbedSpec
+from repro.api import Embedding, EmbedSpec, TransformSpec
 from repro.data import swiss_roll
 
 
@@ -30,16 +31,20 @@ def main():
           f"({res.times[-1] + res.setup_time:.2f}s, "
           f"converged={res.converged})")
 
-    # out-of-sample: kNN affinities against the training set, fixed-anchor
-    # objective — the training embedding is frozen, serving never re-fits
-    X_new = emb.transform(Y_new, max_iters=30)
-    print(f"transformed {X_new.shape[0]} held-out points "
-          f"(training embedding untouched)")
-
-    out = "results/quickstart_embedding.npy"
+    # persist the fitted map as a versioned artifact, then serve from the
+    # LOADED copy — the production story (docs/serving.md); out-of-sample
+    # points get kNN affinities against the training set and a
+    # fixed-anchor solve, the training embedding is never re-fit
     import os
     import numpy as np
     os.makedirs("results", exist_ok=True)
+    emb.save("results/quickstart_model.npz")
+    loaded = Embedding.load("results/quickstart_model.npz")
+    X_new = loaded.transform(
+        Y_new, spec=TransformSpec(solver="rowwise", max_iters=30))
+    print(f"transformed {X_new.shape[0]} held-out points via {loaded!r}")
+
+    out = "results/quickstart_embedding.npy"
     np.save(out, np.asarray(X))
     np.save("results/quickstart_new_points.npy", np.asarray(X_new))
     print(f"embeddings saved to {out}")

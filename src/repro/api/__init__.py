@@ -1,8 +1,11 @@
 # The one public entry point for fitting and serving embeddings: a
 # declarative EmbedSpec, an Embedding estimator (fit / fit_transform /
-# transform / resume), and open strategy/backend registries that make the
-# paper's partial-Hessian strategies interchangeable on every storage/
-# device path.  See docs/api.md.
+# transform / resume / save / load), a frozen TransformSpec for the
+# out-of-sample path, versioned fitted artifacts (repro.api.artifact),
+# and open strategy/backend registries that make the paper's
+# partial-Hessian strategies interchangeable on every storage/device
+# path.  See docs/api.md and docs/serving.md.
+from .artifact import load_artifact, read_header, save_artifact
 from .estimator import Embedding
 from .registries import (
     available_backends,
@@ -11,12 +14,19 @@ from .registries import (
     register_strategy,
     resolve_backend,
 )
-from .spec import EmbedSpec
-from .transform import TransformObjective, transform_points
+from .spec import EmbedSpec, TransformSpec
+from .transform import (
+    RowwiseResult,
+    TransformObjective,
+    resolve_transform_spec,
+    transform_points,
+)
 
 __all__ = [
-    "Embedding", "EmbedSpec",
+    "Embedding", "EmbedSpec", "TransformSpec",
     "available_backends", "available_strategies",
     "register_backend", "register_strategy", "resolve_backend",
-    "TransformObjective", "transform_points",
+    "TransformObjective", "transform_points", "RowwiseResult",
+    "resolve_transform_spec",
+    "save_artifact", "load_artifact", "read_header",
 ]

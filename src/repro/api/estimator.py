@@ -27,6 +27,7 @@ the resumed trajectory is the uninterrupted one, bit-for-bit.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable
 
 import jax
@@ -36,7 +37,7 @@ from repro.embed.engine import EngineResult
 from repro.obs import resolve_telemetry
 
 from . import registries
-from .spec import EmbedSpec
+from .spec import EmbedSpec, TransformSpec
 from .transform import UNSET, transform_points
 
 Array = jnp.ndarray
@@ -142,32 +143,92 @@ class Embedding:
         return self.fit(Y, telemetry=telemetry)
 
     # -- serving ------------------------------------------------------------
-    def transform(self, Y_new: Array, *, max_iters: int | None = None,
+    def transform(self, Y_new: Array, spec: TransformSpec | None = None,
+                  *, max_iters: int | None = None,
                   n_negatives: int | None = UNSET,
                   tol: float | None = None) -> Array:
         """Embed unseen points against the frozen training embedding.
 
         Never re-fits: the training coordinates enter as constants, so
-        `embedding_` is bit-identical before and after.  `n_negatives`
-        defaults to `spec.transform_negatives`; pass `None` for the
-        exhaustive (deterministic) anchored repulsion.  Requires the fit
-        to have seen raw `Y` (not only precomputed affinities)."""
+        `embedding_` is bit-identical before and after.  Configuration is
+        a frozen `TransformSpec` (`spec=`); its zero/None fields defer to
+        the fitted `EmbedSpec` (docs/serving.md).  The legacy keyword
+        form (`max_iters=`, `n_negatives=`, `tol=`) still works but is
+        deprecated — it builds the spec internally, exactly like the
+        `EmbedConfig` -> `EmbedSpec` migration.  Requires the fit to have
+        seen raw `Y` (not only precomputed affinities)."""
         if getattr(self, "embedding_", None) is None:
             raise ValueError("transform() requires a fitted estimator")
         if getattr(self, "_Y_train", None) is None:
+            if getattr(self, "loaded_from_", None):
+                raise ValueError(
+                    "transform() needs the training Y: this estimator was "
+                    "loaded from a train='ref' artifact whose reference "
+                    "was unavailable — pass Y_train= to Embedding.load()")
             raise ValueError(
                 "transform() needs the raw training Y; this estimator was "
                 "fit from precomputed affinities only")
+        legacy = (max_iters is not None or n_negatives is not UNSET
+                  or tol is not None)
+        if spec is not None:
+            if legacy:
+                raise ValueError(
+                    "pass either a TransformSpec or the legacy "
+                    "max_iters/n_negatives/tol kwargs, not both")
+        elif legacy:
+            warnings.warn(
+                "Embedding.transform(max_iters=..., n_negatives=..., "
+                "tol=...) is deprecated; pass a repro.api.TransformSpec "
+                "instead (transform(Y, TransformSpec(...)))",
+                DeprecationWarning, stacklevel=2)
         X_new, res = transform_points(
             self.spec, self._Y_train, self.embedding_, Y_new,
-            max_iters=max_iters, n_negatives=n_negatives, tol=tol)
+            tspec=spec, max_iters=max_iters, n_negatives=n_negatives,
+            tol=tol)
         self.last_transform_result_ = res
         return X_new
 
+    # -- persistence ---------------------------------------------------------
+    def save(self, path: str, *, train: str = "snapshot",
+             train_ref: str | None = None) -> str:
+        """Persist the fitted estimator as a versioned artifact (one
+        `.npz`: embedding + training data + frozen spec + graph stats) —
+        the supported way to move a fitted `Embedding` across processes;
+        pickling is unsupported (`repro.api.artifact`, docs/serving.md).
+        `train='ref'` stores a path + SHA-256 instead of snapshotting Y."""
+        from .artifact import save_artifact
+        return save_artifact(self, path, train=train, train_ref=train_ref)
+
+    @classmethod
+    def load(cls, path: str, *, Y_train=None) -> "Embedding":
+        """Reload a `save()`d artifact: returns a fitted estimator whose
+        `transform()` matches the saving process bit-for-bit in the
+        deterministic (exhaustive) mode — no refit ever happens."""
+        from .artifact import load_artifact
+        return load_artifact(path, Y_train=Y_train)
+
+    def __reduce__(self):
+        raise TypeError(
+            "pickling Embedding is unsupported (jitted closures and device "
+            "arrays do not survive it); use est.save(path) / "
+            "Embedding.load(path) — the versioned artifact format is the "
+            "supported persistence surface (docs/serving.md)")
+
     # -- introspection ------------------------------------------------------
     def __repr__(self):
+        loaded = getattr(self, "loaded_from_", None)
         fitted = getattr(self, "backend_", None)
-        state = f"fitted[{fitted}]" if fitted else "unfitted"
+        if loaded:
+            ver = (getattr(self, "artifact_header_", {}) or {}).get(
+                "schema_version")
+            state = f"loaded[v{ver}:{loaded}]"
+        elif fitted:
+            state = f"fitted[{fitted}]"
+        else:
+            state = "unfitted"
+        n = getattr(self, "embedding_", None)
+        if n is not None:
+            state += f", n_train={n.shape[0]}"
         return (f"Embedding(kind={self.spec.kind!r}, "
                 f"strategy={self.spec.strategy!r}, "
                 f"backend={self.spec.backend!r}, {state})")

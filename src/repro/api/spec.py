@@ -110,3 +110,71 @@ class EmbedSpec:
 
     def replace(self, **changes) -> "EmbedSpec":
         return dataclasses.replace(self, **changes)
+
+
+#: valid `TransformSpec.knn_method` names (cross-kNN dispatch,
+#: sparse/graph.py::knn_cross)
+TRANSFORM_KNN_METHODS = ("exact", "approx", "auto")
+#: valid `TransformSpec.solver` names: 'engine' runs the fixed-anchor
+#: objective through the shared fit_loop (PR-4 semantics, one global line
+#: search over the whole query batch); 'rowwise' runs the fully jitted
+#: per-row solver whose results are independent of batch composition —
+#: the serving path (repro.serve) and its parity gates require it.
+TRANSFORM_SOLVERS = ("engine", "rowwise")
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformSpec:
+    """Declarative out-of-sample transform request, mirroring `EmbedSpec`.
+
+    Replaces the `Embedding.transform(**kwargs)` pile the same way
+    `EmbedSpec` replaced `EmbedConfig`: every serving knob lives here,
+    validated at CONSTRUCTION with the registry-style error messages, and
+    the frozen value doubles as the server's per-request configuration
+    (`repro.serve.EmbeddingServer`).  Zero/None sentinels defer to the
+    fitted `EmbedSpec` (`max_iters=0` -> `transform_iters`, `k_cross=0`
+    -> the training ELL width, `tol=None` -> `spec.tol`).
+    """
+
+    max_iters: int = 0            # 0 => EmbedSpec.transform_iters
+    k_cross: int = 0              # 0 => EmbedSpec.n_neighbors (or 3*perp)
+    n_negatives: int = 0          # 0 => EmbedSpec.transform_negatives
+    exhaustive: bool = False      # deterministic full-anchor repulsion
+                                  # (the exhaustive-Z mode: per-point Z
+                                  # summed over every training anchor)
+    knn_method: str = "auto"      # cross-kNN: 'exact'|'approx'|'auto'
+    solver: str = "engine"        # 'engine' | 'rowwise' (batch-invariant)
+    batch_size: int = 0           # rowwise chunking cap; 0 => one batch
+    tol: float | None = None      # None => EmbedSpec.tol
+    seed: int = 0                 # negative-anchor draw (sampled mode)
+    # approx cross-kNN knobs (sparse/graph.py::knn_cross_approx)
+    n_projections: int = 8
+    window: int = 16
+
+    def __post_init__(self):
+        if self.knn_method not in TRANSFORM_KNN_METHODS:
+            raise ValueError(
+                f"unknown knn_method {self.knn_method!r}; supported "
+                f"cross-kNN methods: {list(TRANSFORM_KNN_METHODS)}")
+        if self.solver not in TRANSFORM_SOLVERS:
+            raise ValueError(
+                f"unknown solver {self.solver!r}; supported transform "
+                f"solvers: {list(TRANSFORM_SOLVERS)}")
+        for name in ("max_iters", "k_cross", "n_negatives", "batch_size"):
+            v = getattr(self, name)
+            if not isinstance(v, int) or v < 0:
+                raise ValueError(
+                    f"TransformSpec.{name} must be a non-negative int "
+                    f"(0 defers to the fitted EmbedSpec), got {v!r}")
+        for name in ("n_projections", "window"):
+            v = getattr(self, name)
+            if not isinstance(v, int) or v < 1:
+                raise ValueError(
+                    f"TransformSpec.{name} must be a positive int, "
+                    f"got {v!r}")
+        if self.tol is not None and self.tol < 0:
+            raise ValueError(f"TransformSpec.tol must be >= 0 or None, "
+                             f"got {self.tol!r}")
+
+    def replace(self, **changes) -> "TransformSpec":
+        return dataclasses.replace(self, **changes)

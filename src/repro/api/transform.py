@@ -10,24 +10,36 @@ every training coordinate held constant:
   * attraction — kNN affinities of y against the TRAINING set, calibrated
     per row to the spec's perplexity exactly as in training
     (`sparse.graph.calibrated_weights_ell` over the `knn_cross`
-    candidates);
-  * repulsion — y against `transform_negatives` uniformly sampled training
+    candidates; `TransformSpec.knn_method='approx'` swaps the exact
+    blocked scan for the random-projection candidate search so queries
+    stay cheap when the training set is large);
+  * repulsion — y against `n_negatives` uniformly sampled training
     anchors, scaled by N/m (the unbiased estimate of repulsion against the
-    whole training set; `None`/m >= N runs exhaustively and
-    deterministically).  Normalized kinds (ssne/tsne) use each new point's
-    OWN partition function over the anchors, log-weighted as in training.
+    whole training set; `exhaustive=True` runs deterministically over
+    every anchor).  Normalized kinds (ssne/tsne) use each new point's OWN
+    partition function over the anchors, log-weighted as in training.
 
 Because the anchors never move, the free problem is separable across new
 points (no new-new interactions), the Hessian's attractive part is
 diagonal, and each `transform` costs O(n_new * (k + m) * d) per iteration
-— serving-scale, independent of how long training took.  Gradients come
-from autodiff of the anchored energy (the hand-derived Laplacian forms
-exist for the training objective's symmetric pair structure, which the
-anchored problem doesn't have), and the optimization runs through the
-same `fit_loop` engine as every fit backend.
+— serving-scale, independent of how long training took.
+
+Two solvers realize the same anchored objective (`TransformSpec.solver`):
+
+  * ``'engine'`` (default) — the PR-4 path: autodiff energy through the
+    shared `fit_loop`, one global backtracking line search over the whole
+    query batch.  Bit-compatible with every pinned transform trajectory.
+  * ``'rowwise'`` — a fully jitted per-row solver: per-row Armijo
+    backtracking on the row's own anchored energy, per-row adaptive-grow
+    step, per-row convergence freezing.  No host round-trip per iteration
+    and, because nothing couples rows (the sampled negative-anchor draw
+    is a pure function of (seed, iteration)), results are INDEPENDENT of
+    batch composition — the property `repro.serve`'s micro-batching and
+    padding correctness rests on (docs/serving.md).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -111,9 +123,171 @@ class TransformObjective:
         return solve, ()
 
 
-@functools.partial(jax.jit, static_argnames=("k", "perplexity"))
-def _anchor_affinities(Y_new, Y_train, k: int, perplexity: float):
-    d2, idx = knn_cross(Y_new, Y_train, k)
+# -- the rowwise (batch-invariant) solver ---------------------------------------
+
+
+@dataclasses.dataclass
+class RowwiseResult:
+    """Host-side summary of one rowwise transform solve (the lightweight
+    analogue of the engine path's `EngineResult`)."""
+
+    X: Array
+    n_iters: int              # outer iterations actually run
+    n_rows: int
+    n_converged: int          # rows frozen by the per-row tol test
+
+
+@functools.lru_cache(maxsize=64)
+def _rowwise_fn(kind: str, m: int, exhaustive: bool, max_iters: int,
+                tol: float, seed: int, c1: float, rho: float,
+                max_backtracks: int, max_rel_move: float | None):
+    """The jitted rowwise solve for one static knob combination.  jax's
+    jit cache then specializes per array shape — which is exactly the
+    per-batch-size compilation cache `repro.serve` buckets requests into
+    (`EmbeddingServer.cache_info()` reports the keys)."""
+    normalized = is_normalized(kind)
+
+    def solve(anchors, nn_idx, nn_w, X0, lam):
+        n_train = anchors.shape[0]
+        lam_ = jnp.asarray(lam, anchors.dtype)
+        scale = 1.0 if exhaustive else n_train / m
+        J0 = jnp.arange(n_train, dtype=jnp.int32)
+
+        def draw(it):
+            if exhaustive:
+                return J0
+            key = jax.random.fold_in(jax.random.PRNGKey(seed), it)
+            return jax.random.choice(
+                key, n_train, shape=(m,), replace=False).astype(jnp.int32)
+
+        def row_energy(X, J):
+            t_att = jnp.sum((X[:, None, :] - anchors[nn_idx]) ** 2, axis=-1)
+            e_rows = jnp.sum(attractive_edge_terms(kind, nn_w, t_att)[0],
+                             axis=1)
+            t_neg = jnp.sum((X[:, None, :] - anchors[J]) ** 2, axis=-1)
+            s_row = scale * jnp.sum(negative_pair_terms(kind, t_neg)[0],
+                                    axis=1)
+            if normalized:
+                return e_rows + lam_ * jnp.log(jnp.maximum(s_row, 1e-30))
+            return e_rows + lam_ * s_row
+
+        def total(X, J):
+            e = row_energy(X, J)
+            return jnp.sum(e), e
+
+        vg = jax.value_and_grad(total, has_aux=True)
+
+        # per-row diagonal preconditioner: B_r = 4 deg_r + mu_r with a
+        # PER-ROW damping (a global mu would couple rows through the
+        # batch, breaking batch-composition invariance)
+        deg = jnp.sum(nn_w, axis=1)
+        inv_diag = 1.0 / (4.0 * deg + jnp.maximum(4e-5 * deg, 1e-12))
+        # trust cap scale: spread of the (fixed) anchor embedding
+        a_c = anchors - jnp.mean(anchors, axis=0, keepdims=True)
+        a_rms = jnp.sqrt(jnp.mean(a_c * a_c)) + 1e-3
+
+        n_rows = X0.shape[0]
+
+        def outer_cond(carry):
+            it, X, alpha_prev, frozen = carry
+            return (it < max_iters) & ~jnp.all(frozen)
+
+        def outer_body(carry):
+            it, X, alpha_prev, frozen = carry
+            J = draw(it)
+            (_, e_rows), G = vg(X, J)
+            P = -inv_diag[:, None] * G
+            dgp = jnp.sum(G * P, axis=1)
+            # adaptive-grow init + per-row trust cap (engine policy,
+            # vectorized over rows)
+            alpha = jnp.minimum(alpha_prev / rho, 1.0)
+            if max_rel_move is not None:
+                p_rms = jnp.sqrt(jnp.mean(P * P, axis=1)) + 1e-30
+                alpha = jnp.minimum(alpha, max_rel_move * a_rms / p_rms)
+
+            ok0 = frozen
+            alpha0 = jnp.where(frozen, 0.0, alpha)
+
+            def bt_cond(c):
+                _, ok, _, tries = c
+                return ~jnp.all(ok) & (tries < max_backtracks)
+
+            def bt_body(c):
+                a, ok, e_new, tries = c
+                Xt = X + a[:, None] * P
+                e_t = row_energy(Xt, J)
+                ok_now = e_t <= e_rows + c1 * a * dgp
+                e_new = jnp.where(~ok & ok_now, e_t, e_new)
+                a = jnp.where(ok | ok_now, a, a * rho)
+                return a, ok | ok_now, e_new, tries + 1
+
+            alpha_f, ok, e_new, _ = jax.lax.while_loop(
+                bt_cond, bt_body, (alpha0, ok0, e_rows, 0))
+            failed = ~ok & ~frozen          # line search exhausted
+            alpha_f = jnp.where(ok & ~frozen, alpha_f, 0.0)
+            X = X + alpha_f[:, None] * P
+            # per-row raw convergence on the CRN pair (same J)
+            rel = jnp.abs(e_rows - e_new) / jnp.maximum(
+                jnp.abs(e_rows), 1e-30)
+            frozen = frozen | failed | (~frozen & (rel < tol))
+            alpha_prev = jnp.where(alpha_f > 0, alpha_f, alpha_prev)
+            return it + 1, X, alpha_prev, frozen
+
+        it0 = jnp.asarray(0, jnp.int32)
+        alpha0 = jnp.ones((n_rows,), X0.dtype)
+        frozen0 = jnp.zeros((n_rows,), bool)
+        it, X, _, frozen = jax.lax.while_loop(
+            outer_cond, outer_body, (it0, X0, alpha0, frozen0))
+        return X, it, jnp.sum(frozen)
+
+    return jax.jit(solve)
+
+
+def rowwise_transform(kind: str, lam, anchors: Array, nn_idx: Array,
+                      nn_w: Array, X0: Array, *,
+                      n_negatives: int | None, max_iters: int, tol: float,
+                      seed: int, ls) -> RowwiseResult:
+    """Solve the anchored problem row-independently (see module docstring).
+    `n_negatives=None` (or >= n_train) is the exhaustive deterministic
+    mode.  Returns a `RowwiseResult`."""
+    n_train = anchors.shape[0]
+    exhaustive = n_negatives is None or n_negatives >= n_train
+    fn = _rowwise_fn(kind, 0 if exhaustive else int(n_negatives),
+                     exhaustive, int(max_iters), float(tol), int(seed),
+                     float(ls.c1), float(ls.rho), int(ls.max_backtracks),
+                     None if ls.max_rel_move is None
+                     else float(ls.max_rel_move))
+    n_rows = int(X0.shape[0])
+    if n_rows == 1:
+        # XLA lowers the (1, ...) reductions differently from every n >= 2
+        # (which are all bit-identical to each other), and the Armijo
+        # branch amplifies that last-bit drift into visible divergence —
+        # duplicating the row keeps single-row calls exactly on the batch
+        # trajectory (tests/test_api.py pins this)
+        nn_idx = jnp.concatenate([nn_idx, nn_idx], axis=0)
+        nn_w = jnp.concatenate([nn_w, nn_w], axis=0)
+        X0 = jnp.concatenate([X0, X0], axis=0)
+    X, it, n_conv = fn(anchors, nn_idx, nn_w, X0, lam)
+    if n_rows == 1:
+        X = X[:1]
+        n_conv = jnp.minimum(n_conv, 1)
+    return RowwiseResult(X=X, n_iters=int(it), n_rows=n_rows,
+                         n_converged=int(n_conv))
+
+
+# -- cross affinities -----------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "k", "perplexity", "method", "n_projections", "window", "knn_seed"))
+def _anchor_affinities(Y_new, Y_train, k: int, perplexity: float,
+                       method: str = "exact", n_projections: int = 8,
+                       window: int = 16, knn_seed: int = 0):
+    kw = ({"n_projections": n_projections, "window": window,
+           "seed": knn_seed} if method == "approx" else {})
+    d2, idx = knn_cross(Y_new, Y_train, k, method=method, **kw)
+    # approx candidates can carry +inf duplicate markers; their calibrated
+    # weight is exactly 0, so they behave like padded slots
     w = calibrated_weights_ell(d2, jnp.ones_like(idx, dtype=bool),
                                perplexity)
     return idx, w
@@ -124,47 +298,125 @@ def _anchor_affinities(Y_new, Y_train, k: int, perplexity: float):
 UNSET = object()
 
 
+def resolve_transform_spec(spec, tspec):
+    """Fill a `TransformSpec`'s deferred (zero/None) fields from the
+    fitted `EmbedSpec`; returns the concrete spec serving will use."""
+    from .spec import TransformSpec
+    if tspec is None:
+        tspec = TransformSpec()
+    changes = {}
+    if tspec.max_iters == 0:
+        changes["max_iters"] = int(spec.transform_iters)
+    if tspec.n_negatives == 0:
+        changes["n_negatives"] = int(spec.transform_negatives)
+    if tspec.tol is None:
+        changes["tol"] = float(spec.tol)
+    return tspec.replace(**changes) if changes else tspec
+
+
+def _resolve_k(spec, tspec, n_train: int, perplexity: float) -> int:
+    k = tspec.k_cross or spec.n_neighbors or int(3 * perplexity)
+    k = min(k, n_train)
+    if k < perplexity:
+        raise ValueError(
+            f"transform k={k} < perplexity={perplexity}: the "
+            f"candidate entropy cannot reach log(perplexity) "
+            f"(use more training points or a smaller perplexity)")
+    return k
+
+
 def transform_points(spec, Y_train: Array, X_train: Array, Y_new: Array,
-                     *, max_iters: int | None = None,
+                     *, tspec=None, max_iters: int | None = None,
                      n_negatives: int | None = UNSET,
                      tol: float | None = None):
     """Embed `Y_new` against the frozen (Y_train, X_train) map.
 
-    Returns `(X_new, EngineResult)`; an empty `Y_new` short-circuits to an
-    empty embedding (result None).  X_train is only ever READ — the
-    training embedding stays bit-identical through any number of
-    transforms.  `n_negatives=None` switches the anchored repulsion to
-    the exhaustive (every training anchor, deterministic) mode.
+    Configuration comes from a `TransformSpec` (`tspec`); the legacy
+    `max_iters`/`n_negatives`/`tol` kwargs are still honored when no spec
+    is given (`Embedding.transform` owns their deprecation).  Returns
+    `(X_new, result)` where `result` is an `EngineResult` (engine solver),
+    a `RowwiseResult` (rowwise solver), or None for an empty batch.
+    X_train is only ever READ — the training embedding stays bit-identical
+    through any number of transforms.
     """
+    from .spec import TransformSpec
+    if tspec is None:
+        tspec = TransformSpec(
+            max_iters=0 if max_iters is None else int(max_iters),
+            exhaustive=(n_negatives is not UNSET and n_negatives is None),
+            n_negatives=(0 if n_negatives in (UNSET, None)
+                         else int(n_negatives)),
+            tol=tol)
+    tspec = resolve_transform_spec(spec, tspec)
+
     Y_train = jnp.asarray(Y_train)
     Y_new = jnp.asarray(Y_new)
     anchors = jnp.asarray(X_train)
     if Y_new.shape[0] == 0:
         return jnp.zeros((0, anchors.shape[1]), anchors.dtype), None
+    single = tspec.solver == "rowwise" and Y_new.shape[0] == 1
+    if single:
+        # XLA lowers the lone-query pipeline (kNN reduction, calibration
+        # bisection, solve) differently from every n >= 2 batch — which
+        # are all bit-identical to each other — and the branchy solver
+        # amplifies the last-bit drift.  Duplicating the row keeps
+        # single-row transforms exactly on the batch trajectory, which is
+        # the serving invariance guarantee (tests/test_api.py pins it).
+        Y_new = jnp.concatenate([Y_new, Y_new], axis=0)
     n_train = Y_train.shape[0]
-    k = spec.n_neighbors or int(3 * spec.perplexity)
-    k = min(k, n_train)
-    if k < spec.perplexity:
-        raise ValueError(
-            f"transform k={k} < perplexity={spec.perplexity}: the "
-            f"candidate entropy cannot reach log(perplexity) "
-            f"(use more training points or a smaller perplexity)")
-    with span("cross-knn", phase=True, n_new=int(Y_new.shape[0]), k=k):
-        idx, w = jax.block_until_ready(
-            _anchor_affinities(Y_new, Y_train, k, float(spec.perplexity)))
+    k = _resolve_k(spec, tspec, n_train, spec.perplexity)
+    from repro.sparse.graph import CROSS_APPROX_N
+    method = tspec.knn_method
+    if method == "auto":
+        method = "exact" if n_train <= CROSS_APPROX_N else "approx"
+    with span("cross-knn", phase=True, n_new=int(Y_new.shape[0]), k=k,
+              method=method):
+        idx, w = jax.block_until_ready(_anchor_affinities(
+            Y_new, Y_train, k, float(spec.perplexity), method=method,
+            n_projections=tspec.n_projections, window=tspec.window,
+            knn_seed=tspec.seed))
 
-    m = spec.transform_negatives if n_negatives is UNSET else n_negatives
-    obj = TransformObjective(spec.kind, spec.lam, anchors, idx, w, m)
+    m = None if tspec.exhaustive else tspec.n_negatives
 
     # init each new point at its calibrated anchor barycenter — already a
     # good embedding when the neighborhood is coherent; the fit sharpens it
     X0 = jnp.einsum("mk,mkd->md", w, anchors[idx])
 
+    if tspec.solver == "rowwise":
+        bs = tspec.batch_size
+        if bs and Y_new.shape[0] > bs:
+            # chunked serving: the rowwise solver is batch-invariant, so
+            # chunk boundaries cannot change any row's result
+            outs, iters, conv = [], 0, 0
+            for i in range(0, Y_new.shape[0], bs):
+                r = rowwise_transform(
+                    spec.kind, spec.lam, anchors, idx[i:i + bs],
+                    w[i:i + bs], X0[i:i + bs], n_negatives=m,
+                    max_iters=tspec.max_iters, tol=tspec.tol,
+                    seed=tspec.seed, ls=spec.resolved_ls())
+                outs.append(r.X)
+                iters = max(iters, r.n_iters)
+                conv += r.n_converged
+            res = RowwiseResult(X=jnp.concatenate(outs, axis=0),
+                                n_iters=iters, n_rows=int(Y_new.shape[0]),
+                                n_converged=conv)
+        else:
+            res = rowwise_transform(
+                spec.kind, spec.lam, anchors, idx, w, X0, n_negatives=m,
+                max_iters=tspec.max_iters, tol=tspec.tol, seed=tspec.seed,
+                ls=spec.resolved_ls())
+        if single:
+            res = RowwiseResult(X=res.X[:1], n_iters=res.n_iters,
+                                n_rows=1,
+                                n_converged=min(res.n_converged, 1))
+        return res.X, res
+
+    obj = TransformObjective(spec.kind, spec.lam, anchors, idx, w, m)
     cfg = LoopConfig(
-        max_iters=spec.transform_iters if max_iters is None else max_iters,
-        tol=spec.tol if tol is None else tol,
+        max_iters=tspec.max_iters,
+        tol=tspec.tol,
         ls=spec.resolved_ls(),
-        seed=spec.seed,
+        seed=tspec.seed if tspec.seed else spec.seed,
     )
     res = fit_loop(obj, X0, cfg)
     return res.X, res

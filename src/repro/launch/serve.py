@@ -1,8 +1,14 @@
-"""Batched serving driver: prefill a batch of prompts, then decode with a
-KV/state cache, with continuous metrics.
+"""Batched LM serving driver: prefill a batch of prompts, then decode with
+a KV/state cache, with continuous metrics.
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --smoke \
         --prompt-len 32 --decode-tokens 16 --batch 4
+
+This is the STATIC-batch ancestor of the generic serving core in
+`repro.serve` — `repro.serve.MicroBatcher` generalizes this loop's
+batch-then-step pattern to dynamic request arrival, and the latency
+accounting here (per-step p50/p99) shares `repro.serve.metrics` so the
+numbers are comparable with the embedding server's stats endpoint.
 """
 from __future__ import annotations
 
@@ -17,6 +23,7 @@ from repro.configs import RunConfig, get_config, get_smoke_config
 from repro.configs.base import ShapeConfig
 from repro.data import batch_for
 from repro.models import build_model, make_decode_step
+from repro.serve.metrics import percentiles
 
 
 def main():
@@ -48,8 +55,10 @@ def main():
     tok_shape = ((a.batch, 1, cfg.n_codebooks) if cfg.n_codebooks
                  else (a.batch, 1))
     generated = []
+    step_s = []
     t0 = time.perf_counter()
     for i in range(a.decode_tokens):
+        ts = time.perf_counter()
         key, sub = jax.random.split(key)
         lg = logits.reshape(tok_shape[:1] + (-1, cfg.vocab_size))
         tok = jax.random.categorical(
@@ -57,16 +66,18 @@ def main():
         tok = tok.reshape(tok_shape).astype(jnp.int32)
         generated.append(np.asarray(tok)[:, 0])
         logits, caches = decode(params, caches, tok)
-    jax.block_until_ready(logits)
+        jax.block_until_ready(logits)
+        step_s.append(time.perf_counter() - ts)
     t_decode = time.perf_counter() - t0
 
     toks = a.batch * a.decode_tokens
+    pct = percentiles([s * 1e3 for s in step_s], qs=(50, 99))
     print(f"arch={cfg.name} batch={a.batch} prompt={a.prompt_len}")
     print(f"prefill: {t_prefill*1e3:.1f}ms "
           f"({a.batch*a.prompt_len/t_prefill:.0f} tok/s incl. compile)")
     print(f"decode:  {t_decode*1e3:.1f}ms total, "
           f"{toks/t_decode:.0f} tok/s, "
-          f"{t_decode/a.decode_tokens*1e3:.1f} ms/step")
+          f"p50 {pct['p50']:.1f} / p99 {pct['p99']:.1f} ms/step")
     g = np.stack(generated)
     print(f"sampled token ids (first sequence): {g[:, 0].reshape(-1)[:16]}")
 

@@ -23,13 +23,14 @@ more than energy and wall-clock.  This package is the substrate:
 Nothing here imports the engine, backends or kernels — only the reverse —
 so every layer of the stack can depend on `repro.obs` without cycles.
 """
-from .record import (IterationRecord, RunRecorder, device_memory_stats,
-                     load_jsonl)
+from .record import (IterationRecord, RequestRecord, RunRecorder,
+                     device_memory_stats, load_jsonl, load_requests)
 from .spans import SpanTracer, activate, current_tracer, span
 from .telemetry import Telemetry, resolve_telemetry
 
 __all__ = [
     "IterationRecord",
+    "RequestRecord",
     "RunRecorder",
     "SpanTracer",
     "Telemetry",
@@ -37,6 +38,7 @@ __all__ = [
     "current_tracer",
     "device_memory_stats",
     "load_jsonl",
+    "load_requests",
     "resolve_telemetry",
     "span",
 ]

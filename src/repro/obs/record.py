@@ -7,6 +7,9 @@ Schema (one JSON object per line, `"type"` discriminated):
     {"type": "iter",  "it": int, "energy": float, "grad_norm": float,
      "alpha": float, "n_evals": int, "t": float, "iter_s": float,
      "extras": {str: float}}
+    {"type": "request", "rid": int, "n_rows": int, "batch": int,
+     "queue_s": float, "compute_s": float, "total_s": float,
+     "status": str}                             # serving-path records
 
 `extras` carries whatever the backend's `Objective.diagnostics()` lifted
 out of its jitted step — `pcg_iters`/`pcg_residual` from the sparse
@@ -75,6 +78,31 @@ class IterationRecord:
         return cls(**{k: v for k, v in obj.items() if k in fields})
 
 
+@dataclasses.dataclass
+class RequestRecord:
+    """One served transform request (`repro.serve`): queue wait, batch
+    compute share, and end-to-end latency, all host wall-clock seconds."""
+
+    rid: int                  # per-server request counter
+    n_rows: int               # query rows in this request
+    batch: int                # micro-batch id the request rode in (-1:
+                              # rejected before batching, e.g. timeout)
+    queue_s: float            # submit -> batch-start wait
+    compute_s: float          # the batch's transform wall-clock
+    total_s: float            # submit -> response latency
+    status: str = "ok"        # 'ok' | 'timeout' | 'error'
+
+    def to_json(self) -> dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["type"] = "request"
+        return d
+
+    @classmethod
+    def from_json(cls, obj: dict[str, Any]) -> "RequestRecord":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in obj.items() if k in fields})
+
+
 class RunRecorder:
     """In-memory buffer of `IterationRecord`s + optional JSONL mirror.
 
@@ -88,6 +116,7 @@ class RunRecorder:
         self.jsonl_path = jsonl_path
         self.record_memory = record_memory
         self.records: list[IterationRecord] = []
+        self.requests: list[RequestRecord] = []
         self.phases: list[dict[str, Any]] = []
         self.meta: dict[str, Any] = {}
         self._fh: IO[str] | None = None
@@ -118,6 +147,10 @@ class RunRecorder:
         self.records.append(rec)
         self._emit(rec.to_json())
 
+    def record_request(self, rec: RequestRecord) -> None:
+        self.requests.append(rec)
+        self._emit(rec.to_json())
+
     def flush(self) -> None:
         if self._fh is not None and not self._fh.closed:
             self._fh.flush()
@@ -136,6 +169,8 @@ class RunRecorder:
             "n_iters": len(recs),
             "phases": {p["name"]: p["dur_s"] for p in self.phases},
         }
+        if self.requests:
+            out["n_requests"] = len(self.requests)
         if not recs:
             return out
         out["final_energy"] = recs[-1].energy
@@ -171,3 +206,18 @@ def load_jsonl(path: str) -> tuple[dict, list[dict], list[IterationRecord]]:
             elif kind == "iter":
                 records.append(IterationRecord.from_json(obj))
     return meta, phases, records
+
+
+def load_requests(path: str) -> list[RequestRecord]:
+    """The `"request"`-typed records of a recorder JSONL (the serving
+    path's per-request latency log); other record types are skipped."""
+    out: list[RequestRecord] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            obj = json.loads(line)
+            if obj.get("type") == "request":
+                out.append(RequestRecord.from_json(obj))
+    return out

@@ -1,0 +1,33 @@
+"""`repro.serve`: embedding-as-a-service over fitted artifacts.
+
+The serving stack for `Embedding.transform` (docs/serving.md):
+
+  * `EmbeddingServer` — micro-batched, deadline-aware transform server
+    over one fitted/loaded `Embedding`, with bucketed pre-jitted steps
+    and per-request telemetry;
+  * `MicroBatcher` — the generic request-coalescing queue underneath it;
+  * `repro.serve.http` — a stdlib JSON-over-HTTP front-end
+    (`python -m repro.serve.http --artifact model.npz`);
+  * `metrics` — shared nearest-rank percentile / latency accounting.
+
+Request configuration is a `repro.api.TransformSpec` (re-exported here
+for convenience); the server requires `solver='rowwise'`, the
+batch-composition-invariant solve that makes micro-batching and bucket
+padding provably response-preserving.
+"""
+from repro.api.spec import TransformSpec
+
+from .batching import BatchStats, MicroBatcher
+from .metrics import LatencyStats, percentile, percentiles
+from .server import EmbeddingServer, batch_bucket
+
+__all__ = [
+    "BatchStats",
+    "EmbeddingServer",
+    "LatencyStats",
+    "MicroBatcher",
+    "TransformSpec",
+    "batch_bucket",
+    "percentile",
+    "percentiles",
+]

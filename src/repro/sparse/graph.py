@@ -167,16 +167,35 @@ def knn_graph_approx(Y: Array, k: int, n_projections: int = 8,
     return d2.reshape(n_pad, k)[:n], idx.reshape(n_pad, k)[:n]
 
 
-def knn_cross(Yq: Array, Yr: Array, k: int, block_rows: int = 1024
-              ) -> tuple[Array, Array]:
+#: reference-set size above which ``knn_cross(method="auto")`` switches
+#: from the exact blocked pass to the random-projection candidate search
+#: (same threshold as the self-kNN `knn_graph` auto policy).
+CROSS_APPROX_N = 20_000
+
+
+def _validate_cross_k(k: int, n_r: int) -> None:
+    """Up-front `knn_cross` argument check: a clear ValueError at the call
+    boundary instead of a shape error from `top_k` deep inside the blocked
+    distance loop (the serving path hits this with user-supplied
+    `k_cross` against a possibly tiny training set)."""
+    if k < 1:
+        raise ValueError(f"knn_cross needs k >= 1, got k={k}")
+    if k > n_r:
+        raise ValueError(
+            f"knn_cross k={k} exceeds the reference-set size "
+            f"n_train={n_r}: each query needs k distinct training "
+            f"neighbors (lower k_cross or provide more training points)")
+
+
+def knn_cross_exact(Yq: Array, Yr: Array, k: int, block_rows: int = 1024
+                    ) -> tuple[Array, Array]:
     """Exact blocked k-NN from QUERY rows to REFERENCE rows: (d2, indices),
     both (n_q, k), indices into Yr.  No self-exclusion — the two sets are
     distinct by construction (the out-of-sample transform's new points vs
     the training set).  O(n_q * n_r * D) compute, O(block_rows * n_r)
     memory, same blocking as `knn_graph_exact`."""
     n_q, n_r = Yq.shape[0], Yr.shape[0]
-    if k > n_r:
-        raise ValueError(f"k={k} must be <= n_reference={n_r}")
+    _validate_cross_k(k, n_r)
     if n_q == 0:
         return (jnp.zeros((0, k), Yr.dtype),
                 jnp.zeros((0, k), jnp.int32))
@@ -195,6 +214,89 @@ def knn_cross(Yq: Array, Yr: Array, k: int, block_rows: int = 1024
 
     d2, idx = jax.lax.map(one_block, jnp.arange(0, n_pad, br))
     return d2.reshape(n_pad, k)[:n_q], idx.reshape(n_pad, k)[:n_q]
+
+
+def knn_cross_approx(Yq: Array, Yr: Array, k: int, n_projections: int = 8,
+                     window: int = 16, seed: int = 0,
+                     block_rows: int = 1024) -> tuple[Array, Array]:
+    """Approximate cross-set k-NN via the same random-projection windows
+    as `knn_graph_approx`, extended to two point sets.
+
+    Per projection u: the REFERENCE set is sorted along u once, each query
+    is inserted by `searchsorted`, and its candidates are the 2*window
+    reference points flanking the insertion slot.  The candidate union
+    over `n_projections` directions gets exact distances and top-k —
+    O(T n_r (log n_r + D) + T n_q w D) instead of the exact pass's
+    O(n_q n_r D), so serving cost stays flat as the training set grows
+    (docs/serving.md discusses the recall/latency tradeoff)."""
+    n_q, n_r = Yq.shape[0], Yr.shape[0]
+    _validate_cross_k(k, n_r)
+    cand_per_proj = min(2 * window, n_r)
+    if k > n_projections * cand_per_proj:
+        raise ValueError(
+            f"knn_cross approx mode: k={k} exceeds the candidate budget "
+            f"{n_projections} projections x {cand_per_proj} window points"
+            f" = {n_projections * cand_per_proj}; raise window or "
+            f"n_projections (or use method='exact')")
+    if n_q == 0:
+        return (jnp.zeros((0, k), Yr.dtype),
+                jnp.zeros((0, k), jnp.int32))
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_projections)
+    offs = jnp.concatenate(
+        [jnp.arange(-window, 0), jnp.arange(0, window)])
+
+    def candidates_for(key):
+        u = jax.random.normal(key, (Yr.shape[1],), dtype=Yr.dtype)
+        pr = Yr @ u
+        order = jnp.argsort(pr)                          # (n_r,) ref ids
+        slot = jnp.searchsorted(pr[order], Yq @ u)       # (n_q,)
+        pos = jnp.clip(slot[:, None] + offs[None, :], 0, n_r - 1)
+        return order[pos]                                # (n_q, 2w)
+
+    cand = jnp.concatenate([candidates_for(kk) for kk in keys], axis=-1)
+    cand = cand.astype(jnp.int32)                        # (n_q, C)
+
+    br = min(block_rows, n_q)
+    n_pad = -(-n_q // br) * br
+    Yp = jnp.pad(Yq, ((0, n_pad - n_q), (0, 0)))
+    cand_p = jnp.pad(cand, ((0, n_pad - n_q), (0, 0)))
+
+    def one_block(row0):
+        Yb = jax.lax.dynamic_slice_in_dim(Yp, row0, br, axis=0)
+        cb = jax.lax.dynamic_slice_in_dim(cand_p, row0, br, axis=0)
+        Yc = Yr[cb]                                      # (br, C, D)
+        d2 = jnp.maximum(
+            jnp.sum(Yb * Yb, axis=-1)[:, None]
+            + jnp.sum(Yc * Yc, axis=-1)
+            - 2.0 * jnp.einsum("bd,bcd->bc", Yb, Yc), 0.0)
+        cb_s, d2_s = _dedupe_sorted_rows(cb, d2)
+        # duplicate slots score +inf; with k <= the distinct candidate
+        # floor (validated above) the top-k never selects one
+        neg, slot = jax.lax.top_k(-d2_s, k)
+        return -neg, jnp.take_along_axis(cb_s, slot, axis=-1)
+
+    d2, idx = jax.lax.map(one_block, jnp.arange(0, n_pad, br))
+    return d2.reshape(n_pad, k)[:n_q], idx.reshape(n_pad, k)[:n_q]
+
+
+def knn_cross(Yq: Array, Yr: Array, k: int, block_rows: int = 1024,
+              method: str = "exact", **approx_kw) -> tuple[Array, Array]:
+    """Cross-set k-NN dispatch: (d2, indices), both (n_q, k), indices into
+    the reference rows `Yr`.  `method`: 'exact' (blocked O(n_q n_r D)
+    pass) | 'approx' (random-projection candidate windows, `knn_cross_
+    approx`) | 'auto' (exact up to n_r = CROSS_APPROX_N, approx above —
+    the serving policy: queries against a large frozen training set must
+    not pay a full scan).  Validates 1 <= k <= n_reference up front."""
+    _validate_cross_k(k, Yr.shape[0])
+    if method == "auto":
+        method = "exact" if Yr.shape[0] <= CROSS_APPROX_N else "approx"
+    if method == "exact":
+        return knn_cross_exact(Yq, Yr, k, block_rows=block_rows)
+    if method == "approx":
+        return knn_cross_approx(Yq, Yr, k, block_rows=block_rows,
+                                **approx_kw)
+    raise ValueError(f"unknown knn_cross method {method!r}; "
+                     f"have 'exact' | 'approx' | 'auto'")
 
 
 def knn_graph(Y: Array, k: int, method: str = "auto", **kw) -> tuple[Array, Array]:

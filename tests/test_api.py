@@ -1,6 +1,9 @@
 """The unified `repro.api` estimator surface: registry validation,
 strategy parity against the legacy drivers, backend auto-resolution,
-out-of-sample transform semantics, and the deprecation shims."""
+out-of-sample transform semantics, the versioned artifact format
+(save/load), and the deprecation shims."""
+import dataclasses
+import os
 import warnings
 
 import jax
@@ -8,8 +11,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.api import Embedding, EmbedSpec, available_backends, \
-    available_strategies, resolve_backend
+from repro.api import Embedding, EmbedSpec, TransformSpec, \
+    available_backends, available_strategies, read_header, resolve_backend
 from repro.core import LSConfig, laplacian_eigenmaps, make_affinities
 from repro.core.strategies import DiagH, FP, GD, SD, SDMinus
 from repro.data import mnist_like
@@ -265,7 +268,8 @@ def test_transform_leaves_training_embedding_bit_identical():
                               max_iters=30, tol=0.0))
     emb.fit(jnp.asarray(Y[:200]))
     before = np.asarray(emb.embedding_).copy()
-    X_new = emb.transform(jnp.asarray(Y[200:]), max_iters=15)
+    X_new = emb.transform(jnp.asarray(Y[200:]),
+                          spec=TransformSpec(max_iters=15))
     assert X_new.shape == (40, 2)
     assert np.all(np.isfinite(np.asarray(X_new)))
     np.testing.assert_array_equal(before, np.asarray(emb.embedding_))
@@ -284,7 +288,8 @@ def test_transform_places_heldout_mnist_near_own_class():
                               max_iters=60, tol=0.0))
     emb.fit(jnp.asarray(Y[:n_tr]))
     X = np.asarray(emb.embedding_)
-    X_new = np.asarray(emb.transform(jnp.asarray(Y[n_tr:]), max_iters=40))
+    X_new = np.asarray(emb.transform(jnp.asarray(Y[n_tr:]),
+                                     spec=TransformSpec(max_iters=40)))
     cents = np.stack([X[l_tr == c].mean(0) for c in range(10)])
     d = ((X_new[:, None, :] - cents[None]) ** 2).sum(-1)
     acc = float((d.argmin(1) == l_te).mean())
@@ -302,8 +307,9 @@ def test_transform_exhaustive_is_deterministic():
                               backend="dense", perplexity=8.0,
                               max_iters=15, tol=0.0))
     emb.fit(jnp.asarray(Y[:100]))
-    a = emb.transform(jnp.asarray(Y[100:]), max_iters=10, n_negatives=None)
-    b = emb.transform(jnp.asarray(Y[100:]), max_iters=10, n_negatives=None)
+    tspec = TransformSpec(max_iters=10, exhaustive=True)
+    a = emb.transform(jnp.asarray(Y[100:]), spec=tspec)
+    b = emb.transform(jnp.asarray(Y[100:]), spec=tspec)
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     # None really selects the exhaustive mode (not the spec's 50-sample
     # default): the objective must come out deterministic
@@ -361,3 +367,224 @@ def test_distributed_embedding_shim_warns():
         cfg = EmbedConfig(kind="ee")
     with pytest.warns(DeprecationWarning, match="repro.api.Embedding"):
         DistributedEmbedding(cfg, mesh)
+
+
+# -- TransformSpec (satellite: frozen request-shaping config) -------------------
+
+
+def test_transform_spec_validation_registry_style():
+    with pytest.raises(ValueError, match="knn_method"):
+        TransformSpec(knn_method="annoy")
+    with pytest.raises(ValueError, match="solver"):
+        TransformSpec(solver="newton")
+    with pytest.raises(ValueError, match="max_iters"):
+        TransformSpec(max_iters=-1)
+    with pytest.raises(ValueError, match="n_projections"):
+        TransformSpec(knn_method="approx", n_projections=0)
+    with pytest.raises(ValueError, match="tol"):
+        TransformSpec(tol=-0.5)
+    # the error names the valid options, like every registry error
+    with pytest.raises(ValueError, match="exact"):
+        TransformSpec(knn_method="annoy")
+
+
+def test_transform_spec_is_frozen_and_replaceable():
+    t = TransformSpec(max_iters=7)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        t.max_iters = 9
+    assert t.replace(solver="rowwise").solver == "rowwise"
+    assert t.max_iters == 7
+
+
+def test_transform_spec_resolves_deferred_fields_from_embedspec():
+    from repro.api import resolve_transform_spec
+
+    spec = EmbedSpec(transform_iters=33, transform_negatives=11, tol=2e-4)
+    r = resolve_transform_spec(spec, TransformSpec())
+    assert (r.max_iters, r.n_negatives, r.tol) == (33, 11, 2e-4)
+    # explicit values win over the spec's defaults
+    r2 = resolve_transform_spec(spec, TransformSpec(max_iters=5, tol=0.0))
+    assert (r2.max_iters, r2.tol) == (5, 0.0)
+
+
+def test_transform_legacy_kwargs_warn_but_match_spec_path():
+    Y, _ = mnist_like(n=120)
+    emb = Embedding(EmbedSpec(kind="ee", lam=10.0, strategy="sd",
+                              backend="dense", perplexity=8.0,
+                              max_iters=8, tol=0.0))
+    emb.fit(jnp.asarray(Y[:100]))
+    with pytest.warns(DeprecationWarning, match="TransformSpec"):
+        a = emb.transform(jnp.asarray(Y[100:]), max_iters=6,
+                          n_negatives=None)
+    b = emb.transform(jnp.asarray(Y[100:]),
+                      spec=TransformSpec(max_iters=6, exhaustive=True))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # mixing the spec with legacy kwargs is an error, not a silent merge
+    with pytest.raises(ValueError, match="not both"):
+        emb.transform(jnp.asarray(Y[100:]), spec=TransformSpec(),
+                      max_iters=3)
+
+
+def test_rowwise_solver_is_batch_composition_invariant():
+    """The serving guarantee: a row's transform is identical whether it
+    arrives alone or inside any batch (micro-batching/padding safety)."""
+    Y, _ = mnist_like(n=160)
+    emb = Embedding(EmbedSpec(kind="ee", lam=10.0, strategy="sd",
+                              backend="dense", perplexity=8.0,
+                              max_iters=10, tol=0.0))
+    emb.fit(jnp.asarray(Y[:128]))
+    Q = jnp.asarray(Y[128:])
+    tspec = TransformSpec(solver="rowwise", max_iters=12)
+    joint = np.asarray(emb.transform(Q, spec=tspec))
+    single = np.stack([np.asarray(emb.transform(Q[i:i + 1], spec=tspec))[0]
+                       for i in range(Q.shape[0])])
+    np.testing.assert_allclose(single, joint, atol=1e-5)
+    # chunked serving path (batch_size) agrees too
+    chunked = np.asarray(emb.transform(
+        Q, spec=tspec.replace(batch_size=5)))
+    np.testing.assert_allclose(chunked, joint, atol=1e-5)
+
+
+# -- versioned artifacts (tentpole: save/load surface) --------------------------
+
+
+@pytest.fixture(scope="module")
+def fitted_small():
+    Y, _ = mnist_like(n=140)
+    emb = Embedding(EmbedSpec(kind="ee", lam=10.0, strategy="sd",
+                              backend="dense", perplexity=8.0,
+                              max_iters=12, tol=0.0, seed=0))
+    emb.fit(jnp.asarray(Y[:120]))
+    return np.asarray(Y), emb
+
+
+def test_artifact_roundtrip_transform_bit_identical(tmp_path, fitted_small):
+    """fit -> save -> load -> transform must equal the in-process
+    transform EXACTLY in the deterministic (exhaustive) mode — the
+    acceptance criterion of the artifact format."""
+    Y, emb = fitted_small
+    path = str(tmp_path / "model.npz")
+    assert emb.save(path) == path
+    loaded = Embedding.load(path)
+    np.testing.assert_array_equal(np.asarray(emb.embedding_),
+                                  np.asarray(loaded.embedding_))
+    assert loaded.spec == emb.spec
+    tspec = TransformSpec(max_iters=8, exhaustive=True)
+    a = np.asarray(emb.transform(jnp.asarray(Y[120:]), spec=tspec))
+    b = np.asarray(loaded.transform(jnp.asarray(Y[120:]), spec=tspec))
+    np.testing.assert_array_equal(a, b)
+    # header carries the calibrated graph stats + provenance
+    hdr = read_header(path)
+    assert hdr["schema_version"] == 1
+    assert hdr["graph"]["k"] >= 1
+    assert hdr["train"]["storage"] == "snapshot"
+    assert hdr["stats"]["backend"] == "dense"
+
+
+def test_artifact_ref_mode_and_hash_verification(tmp_path, fitted_small):
+    Y, emb = fitted_small
+    yref = str(tmp_path / "Y.npy")
+    np.save(yref, np.asarray(emb._Y_train))
+    path = str(tmp_path / "ref.npz")
+    emb.save(path, train="ref", train_ref=yref)
+    # ref artifacts are small: no Y member inside
+    with np.load(path) as z:
+        assert "Y" not in z
+    loaded = Embedding.load(path)
+    np.testing.assert_array_equal(np.asarray(loaded._Y_train),
+                                  np.asarray(emb._Y_train))
+    # drifted reference data fails loudly on the stored SHA-256
+    bad = np.array(np.load(yref))
+    bad[0, 0] += 1.0
+    np.save(yref, bad)
+    with pytest.raises(ValueError, match="hash mismatch"):
+        Embedding.load(path)
+    # explicit Y_train= with the right bytes still loads
+    ok = Embedding.load(path, Y_train=np.asarray(emb._Y_train))
+    assert ok._Y_train is not None
+
+
+def test_artifact_refuses_newer_schema(tmp_path, fitted_small):
+    from repro.api.artifact import read_header as rh, write_artifact
+
+    _, emb = fitted_small
+    path = str(tmp_path / "future.npz")
+    emb.save(path)
+    hdr = rh(path)
+    hdr["schema_version"] = 99
+    hdr["from_the_future"] = True
+    with np.load(path) as z:
+        arrays = {k: np.array(z[k]) for k in z.files
+                  if k != "__header__"}
+    write_artifact(path, hdr, arrays)
+    with pytest.raises(ValueError, match="newer than this"):
+        Embedding.load(path)
+
+
+def test_artifact_ignores_unknown_header_and_members(tmp_path,
+                                                     fitted_small):
+    """Append-only schema: extra header keys, extra spec fields and extra
+    npz members from a forward-compatible v1 writer must load cleanly."""
+    from repro.api.artifact import read_header as rh, write_artifact
+
+    _, emb = fitted_small
+    path = str(tmp_path / "forward.npz")
+    emb.save(path)
+    hdr = rh(path)
+    hdr["new_toplevel_section"] = {"a": 1}
+    hdr["spec"]["future_knob"] = "x"
+    with np.load(path) as z:
+        arrays = {k: np.array(z[k]) for k in z.files
+                  if k != "__header__"}
+    arrays["future_array"] = np.zeros(3)
+    write_artifact(path, hdr, arrays)
+    loaded = Embedding.load(path)
+    np.testing.assert_array_equal(np.asarray(loaded.embedding_),
+                                  np.asarray(emb.embedding_))
+
+
+def test_artifact_golden_fixture_loads():
+    """The committed golden artifact pins the on-disk schema: if this
+    fails, a writer change broke the compatibility contract (readers of
+    every v1 artifact ever written must keep working)."""
+    path = os.path.join(os.path.dirname(__file__), "data",
+                        "golden_artifact_v1.npz")
+    hdr = read_header(path)
+    assert hdr["schema_version"] == 1
+    est = Embedding.load(path)
+    assert np.asarray(est.embedding_).shape == (32, 2)
+    assert np.asarray(est._Y_train).shape == (32, 6)
+    # and it actually serves: one exhaustive transform step runs
+    out = est.transform(np.asarray(est._Y_train[:3]),
+                        spec=TransformSpec(max_iters=2, exhaustive=True,
+                                           solver="rowwise"))
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_embedding_pickle_unsupported(fitted_small):
+    import pickle
+
+    _, emb = fitted_small
+    with pytest.raises(TypeError, match="save"):
+        pickle.dumps(emb)
+
+
+def test_repr_shows_lifecycle(tmp_path, fitted_small):
+    _, emb = fitted_small
+    assert "unfitted" in repr(Embedding(EmbedSpec()))
+    assert "fitted[dense]" in repr(emb)
+    assert "n_train=120" in repr(emb)
+    path = str(tmp_path / "r.npz")
+    emb.save(path)
+    r = repr(Embedding.load(path))
+    assert "loaded[v1:" in r and path in r
+
+
+def test_save_unfitted_or_affinity_only_rejected(problem):
+    with pytest.raises(ValueError, match="fitted"):
+        Embedding(EmbedSpec()).save("/tmp/nope.npz")
+    _, aff, X0 = problem
+    emb = Embedding(EmbedSpec(kind="ee", lam=50.0, max_iters=2, tol=0.0))
+    emb.fit(None, X0=X0, aff=aff)
+    with pytest.raises(ValueError, match="affinities"):
+        emb.save("/tmp/nope.npz")

@@ -1,0 +1,333 @@
+"""The `repro.serve` stack: micro-batching semantics, server parity with
+direct transform (the batch-invariance guarantee), artifact-backed
+serving, and the HTTP front-end (docs/serving.md)."""
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+from concurrent.futures import CancelledError
+
+import numpy as np
+import pytest
+
+from repro.api import Embedding, EmbedSpec, TransformSpec
+from repro.data import mnist_like
+from repro.serve import (EmbeddingServer, LatencyStats, MicroBatcher,
+                         batch_bucket, percentile)
+
+# -- metrics --------------------------------------------------------------------
+
+
+def test_percentile_nearest_rank():
+    vals = [10.0, 20.0, 30.0, 40.0]
+    assert percentile(vals, 50) == 20.0
+    assert percentile(vals, 99) == 40.0
+    assert percentile(vals, 0) == 10.0
+    assert np.isnan(percentile([], 50))
+
+
+def test_latency_stats_snapshot():
+    s = LatencyStats()
+    assert s.snapshot() == {"n": 0}
+    for v in (0.001, 0.002, 0.010):
+        s.add(v)
+    snap = s.snapshot()
+    assert snap["n"] == 3
+    assert snap["p50_ms"] == pytest.approx(2.0)
+    assert snap["max_ms"] == pytest.approx(10.0)
+
+
+def test_batch_bucket_pow2_saturating():
+    assert [batch_bucket(n, 16) for n in (1, 2, 3, 5, 16, 40)] == \
+        [1, 2, 4, 8, 16, 16]
+
+
+# -- MicroBatcher ---------------------------------------------------------------
+
+
+def test_microbatcher_batches_and_orders_results():
+    seen = []
+
+    def process(payloads):
+        seen.append(len(payloads))
+        return [p * 10 for p in payloads]
+
+    with MicroBatcher(process, max_batch=4, max_delay_s=0.05) as mb:
+        futs = [mb.submit(i) for i in range(10)]
+        assert [f.result(timeout=10) for f in futs] == \
+            [i * 10 for i in range(10)]
+    assert sum(seen) == 10
+    assert max(seen) <= 4
+
+
+def test_microbatcher_deadline_timeout():
+    release = threading.Event()
+
+    def process(payloads):
+        release.wait(5)
+        return payloads
+
+    mb = MicroBatcher(process, max_batch=1, max_delay_s=0.0)
+    blocker = mb.submit("slow")          # occupies the worker
+    time.sleep(0.05)
+    doomed = mb.submit("late", timeout=0.01)
+    time.sleep(0.1)                      # deadline passes while queued
+    release.set()
+    assert blocker.result(timeout=10) == "slow"
+    with pytest.raises(TimeoutError, match="deadline"):
+        doomed.result(timeout=10)
+    assert mb.stats.n_timeouts == 1
+    mb.close()
+
+
+def test_microbatcher_error_isolation():
+    def process(payloads):
+        if "poison" in payloads:
+            raise RuntimeError("boom")
+        return payloads
+
+    with MicroBatcher(process, max_batch=1, max_delay_s=0.0) as mb:
+        bad = mb.submit("poison")
+        with pytest.raises(RuntimeError, match="boom"):
+            bad.result(timeout=10)
+        # the worker survived the poison request and keeps serving
+        assert mb.submit("fine").result(timeout=10) == "fine"
+
+
+def test_microbatcher_close_drains_then_rejects():
+    slow = threading.Event()
+
+    def process(payloads):
+        slow.wait(0.05)
+        return payloads
+
+    mb = MicroBatcher(process, max_batch=2, max_delay_s=0.0)
+    futs = [mb.submit(i) for i in range(6)]
+    mb.close(drain=True)
+    assert [f.result(timeout=10) for f in futs] == list(range(6))
+    with pytest.raises(RuntimeError, match="close"):
+        mb.submit(99)
+
+
+def test_microbatcher_close_cancel_mode():
+    release = threading.Event()
+
+    def process(payloads):
+        release.wait(5)
+        return payloads
+
+    mb = MicroBatcher(process, max_batch=1, max_delay_s=0.0)
+    running = mb.submit("running")
+    time.sleep(0.05)
+    queued = [mb.submit(i) for i in range(4)]
+    # close() first so the worker sees cancel-mode before it can pick up
+    # the queued requests; the timer then unblocks the in-flight batch
+    threading.Timer(0.2, release.set).start()
+    mb.close(drain=False)
+    assert running.result(timeout=10) == "running"
+    cancelled = 0
+    for f in queued:
+        try:
+            f.result(timeout=10)
+        except CancelledError:
+            cancelled += 1
+    assert cancelled == len(queued)
+
+
+def test_microbatcher_rejects_bad_config():
+    with pytest.raises(ValueError, match="max_batch"):
+        MicroBatcher(lambda p: p, max_batch=0)
+    with pytest.raises(ValueError, match="max_delay_s"):
+        MicroBatcher(lambda p: p, max_delay_s=-1)
+
+
+# -- EmbeddingServer ------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    Y, _ = mnist_like(n=160)
+    Y = np.asarray(Y, dtype=np.float32)
+    est = Embedding(EmbedSpec(kind="ee", lam=10.0, strategy="sd",
+                              backend="dense", perplexity=8.0,
+                              n_neighbors=24, max_iters=15, tol=0.0,
+                              seed=0))
+    est.fit(Y[:128])
+    return Y, est
+
+
+TSPEC = TransformSpec(solver="rowwise", exhaustive=True, max_iters=10)
+
+
+def test_server_requires_fitted_and_rowwise(fitted):
+    _, est = fitted
+    with pytest.raises(ValueError, match="fitted"):
+        EmbeddingServer(Embedding(EmbedSpec()))
+    with pytest.raises(ValueError, match="rowwise"):
+        EmbeddingServer(est, TransformSpec(solver="engine"))
+
+
+def test_server_concurrent_parity_with_direct_transform(fitted):
+    """The acceptance criterion: responses under concurrent micro-batched
+    load equal one direct transform() over the same rows (exhaustive mode
+    is deterministic, so equality is exact on one device)."""
+    Y, est = fitted
+    Yq = Y[128:] + 0.01
+    direct = np.asarray(est.transform(Yq, spec=TSPEC))
+    out = np.zeros_like(direct)
+    with EmbeddingServer(est, TSPEC, max_batch=8,
+                         max_delay_s=0.005) as srv:
+        srv.warmup()
+
+        def client(idxs):
+            for i in idxs:
+                out[i] = np.asarray(srv.transform(Yq[i], timeout=120.0))
+
+        threads = [threading.Thread(target=client,
+                                    args=(range(c, len(Yq), 4),))
+                   for c in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    # after close() the worker has joined, so every done-callback (and
+    # with it every latency sample) has landed
+    stats = srv.stats()
+    assert np.max(np.abs(out - direct)) <= 1e-5
+    assert stats["n_requests"] == len(Yq)
+    assert stats["n_batches"] < len(Yq)     # batching actually happened
+    assert stats["latency"]["n"] == len(Yq)
+
+
+def test_server_bucket_padding_is_response_invariant(fitted):
+    """A block request that lands in a larger pow2 bucket (padded with
+    row-0 copies) returns the same rows as the unpadded direct path."""
+    Y, est = fitted
+    Yq = Y[128:133]                         # 5 rows -> bucket 8
+    direct = np.asarray(est.transform(Yq, spec=TSPEC))
+    with EmbeddingServer(est, TSPEC, max_batch=16) as srv:
+        got = np.asarray(srv.transform(Yq, timeout=120.0))
+        info = srv.cache_info()
+    assert got.shape == direct.shape
+    assert np.max(np.abs(got - direct)) <= 1e-5
+    assert any(":n8:" in k for k in info), info
+
+
+def test_server_cache_keys_and_warmup(fitted):
+    _, est = fitted
+    with EmbeddingServer(est, TSPEC, max_batch=4) as srv:
+        keys = srv.warmup()
+        # autotune-style keys, one per pow2 bucket up to max_batch
+        assert all(k.startswith("transform:ee:n") for k in keys)
+        assert len(keys) == 3               # buckets 1, 2, 4
+        before = srv.cache_info()
+        srv.transform(np.asarray(est._Y_train)[0], timeout=120.0)
+        after = srv.cache_info()
+    b1 = next(k for k in after if ":n1:" in k)
+    assert after[b1]["hits"] == before[b1]["hits"] + 1
+
+
+def test_server_from_artifact_and_telemetry(tmp_path, fitted):
+    from repro.obs import load_requests
+
+    Y, est = fitted
+    path = str(tmp_path / "m.npz")
+    est.save(path)
+    tel_dir = str(tmp_path / "tel")
+    srv = EmbeddingServer.from_artifact(path, TSPEC, max_batch=4,
+                                        telemetry=tel_dir)
+    try:
+        direct = np.asarray(est.transform(Y[130:134], spec=TSPEC))
+        got = np.asarray(srv.transform(Y[130:134], timeout=120.0))
+        assert np.max(np.abs(got - direct)) <= 1e-5
+    finally:
+        srv.close()
+    reqs = load_requests(tel_dir + "/run.jsonl")
+    assert len(reqs) == 1
+    assert reqs[0].status == "ok" and reqs[0].n_rows == 4
+    assert reqs[0].total_s >= reqs[0].compute_s >= 0
+
+
+def test_server_rejects_wrong_dimension(fitted):
+    _, est = fitted
+    with EmbeddingServer(est, TSPEC) as srv:
+        with pytest.raises(ValueError, match="query must be"):
+            srv.submit(np.zeros(3))
+
+
+def test_server_timeout_surfaces(fitted):
+    _, est = fitted
+    srv = EmbeddingServer(est, TSPEC, max_batch=1, max_delay_s=0.0,
+                          timeout_s=1e-9)
+    try:
+        srv.warmup([1])
+        # occupy the worker so the next request waits past its deadline
+        futs = [srv.submit(np.asarray(est._Y_train)[0])
+                for _ in range(20)]
+        outcomes = []
+        for f in futs:
+            try:
+                f.result(timeout=60)
+                outcomes.append("ok")
+            except TimeoutError:
+                outcomes.append("timeout")
+        assert "timeout" in outcomes
+    finally:
+        srv.close()
+
+
+# -- HTTP front-end -------------------------------------------------------------
+
+
+def _free_port():
+    import socket
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def test_http_endpoints_end_to_end(fitted):
+    from repro.serve.http import serve_http
+
+    Y, est = fitted
+    srv = EmbeddingServer(est, TSPEC, max_batch=4)
+    srv.warmup([1])
+    port = _free_port()
+    ready = threading.Event()
+    t = threading.Thread(target=serve_http, args=(srv,),
+                         kwargs=dict(port=port, ready=ready), daemon=True)
+    t.start()
+    assert ready.wait(30)
+    base = f"http://127.0.0.1:{port}"
+
+    h = json.loads(urllib.request.urlopen(
+        f"{base}/healthz", timeout=30).read())
+    assert h["ok"] and h["n_train"] == 128
+
+    Yq = Y[128:131]
+    req = urllib.request.Request(
+        f"{base}/transform",
+        data=json.dumps({"rows": Yq.tolist()}).encode(),
+        headers={"Content-Type": "application/json"})
+    obj = json.loads(urllib.request.urlopen(req, timeout=120).read())
+    direct = np.asarray(est.transform(Yq, spec=TSPEC))
+    assert np.max(np.abs(np.asarray(obj["embedding"]) - direct)) <= 1e-5
+    assert obj["n"] == 3
+
+    st = json.loads(urllib.request.urlopen(
+        f"{base}/stats", timeout=30).read())
+    assert st["n_requests"] >= 1
+
+    bad = urllib.request.Request(
+        f"{base}/transform", data=b'{"rows": "nope"}',
+        headers={"Content-Type": "application/json"})
+    with pytest.raises(urllib.error.HTTPError) as e:
+        urllib.request.urlopen(bad, timeout=30)
+    assert e.value.code == 400
+
+    with pytest.raises(urllib.error.HTTPError) as e:
+        urllib.request.urlopen(f"{base}/nope", timeout=30)
+    assert e.value.code == 404

@@ -11,9 +11,9 @@ from repro.core.laplacian import laplacian_matmul
 from repro.core.strategies import SparseSD
 from repro.kernels.ref import pairwise_terms_ref
 from repro.sparse import (NeighborGraph, SparseAffinities, from_dense,
-                          knn_graph, pcg, reverse_graph, sparse_affinities,
-                          sparse_laplacian_eigenmaps, sym_degree,
-                          sym_lap_matvec, to_dense)
+                          knn_cross, knn_graph, pcg, reverse_graph,
+                          sparse_affinities, sparse_laplacian_eigenmaps,
+                          sym_degree, sym_lap_matvec, to_dense)
 from tests.conftest import three_loops
 
 UNNORM = [("ee", 50.0), ("tee", 10.0), ("epan", 5.0)]
@@ -347,3 +347,98 @@ def test_trainer_sparse_normalized_descends(kind):
     assert res.energies[-1] < res.energies[0]
     assert res.X.shape == (Y.shape[0], 2)
     assert np.all(np.isfinite(res.energies))
+
+
+# -- cross-set kNN (serving path: queries vs the frozen training set) -----------
+
+
+def test_knn_cross_exact_matches_brute_force():
+    Yr, _ = _problem(n=40)
+    Yq, _ = _problem(n=13, seed=7)
+    d2, idx = knn_cross(Yq, Yr, 5, block_rows=4)
+    D2 = np.array(jnp.sum((Yq[:, None] - Yr[None]) ** 2, axis=-1))
+    for i in range(Yq.shape[0]):
+        want = set(np.argsort(D2[i])[:5])
+        assert set(np.asarray(idx[i])) == want, i
+    np.testing.assert_allclose(np.asarray(d2),
+                               np.sort(D2, axis=1)[:, :5], rtol=1e-5)
+
+
+def test_knn_cross_validates_k_up_front():
+    Yr, _ = _problem(n=10)
+    Yq, _ = _problem(n=3, seed=1)
+    with pytest.raises(ValueError, match="k >= 1"):
+        knn_cross(Yq, Yr, 0)
+    # the error names the training-set size and the fix, before any
+    # blocked distance work runs
+    with pytest.raises(ValueError, match="n_train=10"):
+        knn_cross(Yq, Yr, 11)
+    with pytest.raises(ValueError, match="n_train=10"):
+        knn_cross(Yq, Yr, 11, method="approx")
+
+
+def test_knn_cross_approx_recall_on_clustered_data():
+    """Random-projection candidate windows recover >= 90% of the true
+    cross-neighbors on clustered data (the regime serving cares about:
+    queries near the training manifold)."""
+    rng = np.random.default_rng(3)
+    cents = rng.standard_normal((6, 8)) * 6
+    Yr = jnp.asarray((cents[rng.integers(0, 6, 300)]
+                      + rng.standard_normal((300, 8)) * 0.4)
+                     .astype(np.float32))
+    Yq = jnp.asarray((cents[rng.integers(0, 6, 40)]
+                      + rng.standard_normal((40, 8)) * 0.4)
+                     .astype(np.float32))
+    k = 8
+    _, idx_e = knn_cross(Yq, Yr, k, method="exact")
+    _, idx_a = knn_cross(Yq, Yr, k, method="approx", n_projections=12,
+                         window=24)
+    hits = sum(len(set(np.asarray(idx_e[i]))
+                   & set(np.asarray(idx_a[i])))
+               for i in range(Yq.shape[0]))
+    recall = hits / (Yq.shape[0] * k)
+    assert recall >= 0.9, recall
+
+
+def test_knn_cross_approx_duplicate_slots_are_inf():
+    """Candidate-union slots beyond the distinct candidates carry +inf
+    distances: downstream per-row calibration gives them exactly-zero
+    weight (the padded-slot convention of the ELL graph)."""
+    Yr, _ = _problem(n=6)
+    Yq, _ = _problem(n=4, seed=2)
+    # k == n_r with tiny windows forces duplicate-marked slots
+    d2, idx = knn_cross(Yq, Yr, 6, method="approx", n_projections=4,
+                        window=8)
+    d2 = np.asarray(d2)
+    finite = np.isfinite(d2)
+    # every query found all 6 distinct references (windows cover the set)
+    assert finite.sum(axis=1).min() == 6
+    from repro.sparse import calibrated_weights_ell
+    w = np.asarray(calibrated_weights_ell(
+        jnp.asarray(d2), jnp.ones_like(jnp.asarray(idx), bool), 3.0))
+    assert np.all(w[~finite] == 0.0)
+
+
+def test_knn_cross_auto_threshold_dispatch(monkeypatch):
+    """'auto' switches exact -> approx at CROSS_APPROX_N (the serving
+    policy: no full scans against large frozen training sets)."""
+    from repro.sparse import graph as graph_mod
+
+    Yr, _ = _problem(n=50)
+    Yq, _ = _problem(n=5, seed=4)
+    calls = {}
+    real_exact = graph_mod.knn_cross_exact
+    real_approx = graph_mod.knn_cross_approx
+    monkeypatch.setattr(
+        graph_mod, "knn_cross_exact",
+        lambda *a, **kw: calls.setdefault("m", "exact")
+        or real_exact(*a, **kw))
+    monkeypatch.setattr(
+        graph_mod, "knn_cross_approx",
+        lambda *a, **kw: calls.setdefault("m", "approx")
+        or real_approx(*a, **kw))
+    graph_mod.knn_cross(Yq, Yr, 4, method="auto")
+    assert calls.pop("m") == "exact"
+    monkeypatch.setattr(graph_mod, "CROSS_APPROX_N", 20)
+    graph_mod.knn_cross(Yq, Yr, 4, method="auto")
+    assert calls.pop("m") == "approx"
