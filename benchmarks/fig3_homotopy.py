@@ -5,7 +5,6 @@ from __future__ import annotations
 import argparse
 import json
 
-import numpy as np
 
 from repro.core import homotopy_path, LSConfig
 

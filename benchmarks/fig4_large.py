@@ -11,7 +11,6 @@ from __future__ import annotations
 import argparse
 import json
 
-import numpy as np
 
 from .common import csv_row, mnist_problem, run_method
 

@@ -5,9 +5,7 @@ from __future__ import annotations
 
 import argparse
 import json
-from collections import defaultdict
 
-from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
 
 
 def load(path):

@@ -25,7 +25,6 @@ import argparse
 import json
 import os
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

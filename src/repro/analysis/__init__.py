@@ -1,0 +1,38 @@
+"""`repro.analysis`: codebase-specific static analysis + trace-contract
+guards (docs/analysis.md).
+
+Two halves of one correctness story:
+
+  * **static** — `python -m repro.analysis.lint src/ tests/ benchmarks/`
+    runs the RPR rule set (rules.py): AST lints for the hazard classes
+    that have actually bitten this codebase — host syncs on hot paths,
+    PRNG key reuse, jit retrace hazards, Pallas tile-alignment
+    violations, bf16 accumulation, deprecation-warning hygiene, span
+    misuse.  Pre-existing findings live in the committed
+    `analysis/baseline.json` (append-only suppression contract,
+    baseline.py); CI fails on anything new.
+  * **trace-time** — guards.py pins runtime contracts no AST pass can
+    see: `assert_compile_count` turns XLA retraces into test failures,
+    `no_implicit_transfers` / `no_tracer_leaks` wrap hot loops in jax's
+    transfer and leak guards.
+"""
+from .baseline import Baseline, load_baseline, write_baseline
+from .guards import (CompileCounter, assert_compile_count, jit_cache_size,
+                     no_implicit_transfers, no_tracer_leaks)
+from .lint import Finding, lint_file, lint_paths
+from .rules import ALL_RULES
+
+__all__ = [
+    "ALL_RULES",
+    "Baseline",
+    "CompileCounter",
+    "Finding",
+    "assert_compile_count",
+    "jit_cache_size",
+    "lint_file",
+    "lint_paths",
+    "load_baseline",
+    "no_implicit_transfers",
+    "no_tracer_leaks",
+    "write_baseline",
+]

@@ -271,8 +271,11 @@ def rowwise_transform(kind: str, lam, anchors: Array, nn_idx: Array,
     if n_rows == 1:
         X = X[:1]
         n_conv = jnp.minimum(n_conv, 1)
-    return RowwiseResult(X=X, n_iters=int(it), n_rows=n_rows,
-                         n_converged=int(n_conv))
+    # one batched transfer for both counters (RPR001) — a serve-path
+    # call pays a single device->host round-trip, not two
+    it_h, n_conv_h = jax.device_get((it, n_conv))
+    return RowwiseResult(X=X, n_iters=int(it_h), n_rows=n_rows,
+                         n_converged=int(n_conv_h))
 
 
 # -- cross affinities -----------------------------------------------------------

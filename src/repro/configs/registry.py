@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import importlib
 
-from .base import SHAPES, ModelConfig, RunConfig, ShapeConfig
+from .base import SHAPES, ModelConfig, ShapeConfig
 
 _ARCH_MODULES = {
     "llama-3.2-vision-90b": "llama_3_2_vision_90b",

@@ -15,6 +15,7 @@ jax.lax.fori_loop vmapped over rows.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -57,11 +58,18 @@ def _row_entropy_probs(d2_row: Array, beta: Array, self_idx: Array) -> tuple[Arr
     return h, p
 
 
+@functools.partial(jax.jit, static_argnames=("n_iter",))
 def calibrated_conditionals(
     D2: Array, perplexity: float, n_iter: int = 60
 ) -> Array:
     """Per-row bisection on beta so H(P_n) = log(perplexity).  Returns P (N,N)
-    row-stochastic with zero diagonal."""
+    row-stochastic with zero diagonal.
+
+    Module-level jit with `perplexity` as an operand: the eager
+    vmap-of-fori_loop form rebuilt its `solve_row` closure per call, so
+    every fit recompiled the bisection program (caught by the
+    compile-count guard in tests/test_analysis.py); jitted here it
+    compiles once per (shape, dtype) and perplexity changes are free."""
     n = D2.shape[0]
     target = jnp.log(jnp.asarray(perplexity, dtype=D2.dtype))
     eye = jnp.eye(n, dtype=bool)

@@ -26,7 +26,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from .affinities import Affinities, sq_distances
-from .objectives import gradient_weights, is_normalized
+from .objectives import gradient_weights
 
 Array = jnp.ndarray
 

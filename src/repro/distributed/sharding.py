@@ -129,8 +129,6 @@ def make_activation_constraint(mesh: Mesh, run=None):
     run.act_shard_embed) over "model".  This is what keeps the data axis
     busy inside the layer scan — without it GSPMD drops batch sharding at
     the first head-count reshape that does not divide (DESIGN.md §5)."""
-    import jax.numpy as jnp
-
     fa = fsdp_axes(mesh)
     fsize = _axis_size(mesh, fa) if fa else 1
     msize = mesh.shape.get("model", 1)

@@ -28,8 +28,6 @@ Spectral-direction solves:
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp

@@ -122,8 +122,11 @@ def initial_step(X, P, alpha_prev: float, ls: LSConfig) -> float:
     alpha0 = min(alpha_prev / ls.rho, 1.0)
     if ls.max_rel_move is not None:
         xc = X - jnp.mean(X, axis=0, keepdims=True)
-        scale = float(jnp.sqrt(jnp.mean(xc * xc))) + 1e-3
-        p_rms = float(jnp.sqrt(jnp.mean(P * P))) + 1e-30
+        # one batched transfer for both scalars (RPR001)
+        scale_d, p_rms_d = jax.device_get(
+            (jnp.sqrt(jnp.mean(xc * xc)), jnp.sqrt(jnp.mean(P * P))))
+        scale = float(scale_d) + 1e-3
+        p_rms = float(p_rms_d) + 1e-30
         alpha0 = min(alpha0, ls.max_rel_move * scale / p_rms)
     return alpha0
 
@@ -298,17 +301,21 @@ def _fit_loop(objective, X0, cfg, callback, cb_wants_diag, on_iteration,
         # start_it + 1 sees exactly what the uninterrupted run saw
         objective.restore_carry(obj_carry)
 
-    energies = [float(E)]
-    gnorms = [float(jnp.linalg.norm(G))]
+    # one batched transfer for the pre-loop scalars instead of three
+    # separate implicit syncs (RPR001) — same values, bit-identical
+    e_host, g_host = (float(v) for v in
+                      jax.device_get((E, jnp.linalg.norm(G))))
+    energies = [e_host]
+    gnorms = [g_host]
     steps: list[float] = []
     times = [0.0]
     fevals = [1]
     if ema is None:
-        ema = float(E)
+        ema = e_host
     if recorder is not None:
         recorder.set_meta(start_it=start_it, resumed_from=resumed_from,
                           stochastic=stochastic, max_iters=cfg.max_iters,
-                          e0=float(E))
+                          e0=e_host)
 
     def save(step):
         if ckpt is not None:
@@ -336,9 +343,12 @@ def _fit_loop(objective, X0, cfg, callback, cb_wants_diag, on_iteration,
             if fused_step is not None:
                 X, E_new, G, state, alpha_dev, ne = jax.block_until_ready(
                     fused_step(X, E, G, state, alpha_dev))
-                e_rec = float(E_new)
-                alpha_host = float(alpha_dev)
-                n_ev = int(ne)
+                # one batched transfer for all per-iteration scalars
+                # (RPR001): energy, |G|, accepted step, n_evals
+                vals = jax.device_get(
+                    (E_new, jnp.linalg.norm(G), alpha_dev, ne))
+                e_rec, g_host, alpha_host = (float(v) for v in vals[:3])
+                n_ev = int(vals[3])
             else:
                 n_ev = 0
                 if stochastic:
@@ -346,23 +356,32 @@ def _fit_loop(objective, X0, cfg, callback, cb_wants_diag, on_iteration,
                     # a deterministic surrogate (common random numbers)
                     key = jax.random.fold_in(key0, it)
                     E, G = objective.energy_and_grad(X, key)
+                    # E is e0 for the backtrack below; batch it with
+                    # |G| in one transfer (RPR001)
+                    e_host, g_host = (float(v) for v in
+                                      jax.device_get((E, jnp.linalg.norm(G))))
                     n_ev += 1
+                else:
+                    # deterministic: E is unchanged since its transfer
+                    # last iteration (or pre-loop) — reuse the host copy
+                    e_host = energies[-1]
                 P, state = solve(state, X, G)
                 alpha0 = initial_step(X, P, alpha_host, cfg.ls)
                 alpha_host, e_new, n_bt = host_backtrack(
                     lambda Xn: float(objective.energy(Xn, key)),
-                    X, float(E), G, P, alpha0, cfg.ls)
+                    X, e_host, G, P, alpha0, cfg.ls)
                 n_ev += n_bt
                 X = X + alpha_host * P
                 if stochastic:
                     e_rec = e_new  # this iteration's surrogate, accepted X
                 else:
                     E, G = objective.energy_and_grad(X, key)
-                    e_rec = float(E)
+                    e_rec, g_host = (float(v) for v in
+                                     jax.device_get((E, jnp.linalg.norm(G))))
                     n_ev += 1
         now = time.perf_counter() - t_loop
         energies.append(e_rec)
-        gnorms.append(float(jnp.linalg.norm(G)))
+        gnorms.append(g_host)
         steps.append(alpha_host)
         times.append(now)
         fevals.append(fevals[-1] + n_ev)

@@ -61,7 +61,7 @@ from .distributed import (
     shard_pairwise,
     shard_rows,
 )
-from .engine import EngineResult, LoopConfig, fit_loop
+from .engine import EngineResult, LoopConfig
 
 Array = jnp.ndarray
 
@@ -231,7 +231,9 @@ class _SparseObjective:
         """Host floats of the last direction solve's diagnostics (only
         called when telemetry or a diagnostics consumer is attached, so
         the device->host transfer is never paid by plain fits)."""
-        return {k: float(v) for k, v in self._solver_diag.items()}
+        # one batched transfer instead of a sync per scalar (RPR001)
+        host = jax.device_get(self._solver_diag)
+        return {k: float(v) for k, v in host.items()}
 
     def place(self, X):
         return self._place(X) if self._place is not None else X
@@ -263,7 +265,9 @@ class _NormalizedSparseObjective(_SparseObjective):
         self._z = jnp.asarray(z)
 
     def diagnostics(self) -> dict:
-        return {**super().diagnostics(), "z_ema": float(self._z)}
+        # batch z with the solver diagnostics in one transfer (RPR001)
+        host = jax.device_get({**self._solver_diag, "z_ema": self._z})
+        return {k: float(v) for k, v in host.items()}
 
 
 # -- backend builders -----------------------------------------------------------

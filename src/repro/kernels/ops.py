@@ -49,7 +49,6 @@ import jax.numpy as jnp
 from repro.obs import current_tracer, span
 
 from . import autotune
-from .autotune import KernelConfig
 from .pairwise import pairwise_terms_pallas
 from .ref import KINDS, PairwiseTerms, ell_lap_matvec_ref, pairwise_terms_ref
 from .sparse_attractive import (ell_lap_matvec_local_pallas,

@@ -19,7 +19,6 @@ this process; tests and benchmarks see the real device list.
 """
 
 import argparse
-import dataclasses
 import json
 import time
 import traceback

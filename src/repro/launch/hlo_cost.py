@@ -27,7 +27,6 @@ from __future__ import annotations
 import dataclasses
 import math
 import re
-from functools import lru_cache
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "c64": 8, "c128": 16,

@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.ckpt import Checkpointer
 from repro.configs import RunConfig, get_config, get_smoke_config
-from repro.configs.base import SHAPES, ShapeConfig
+from repro.configs.base import ShapeConfig
 from repro.data import batch_for
 from repro.distributed.sharding import (batch_shardings,
                                         make_activation_constraint,

@@ -23,7 +23,6 @@ distributed/sharding.py.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable
 
 import jax

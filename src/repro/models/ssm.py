@@ -27,7 +27,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 
-from .layers import _dense_init, cdt, pdt
+from .layers import _dense_init, pdt
 
 Array = jnp.ndarray
 

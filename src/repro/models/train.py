@@ -7,18 +7,13 @@ program; at scale it is lowered with explicit in/out shardings
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, RunConfig
 from repro.optim import adamw
 from repro.optim.compress import compress_with_feedback, init_feedback
 
-from . import hooks
-from .model import Model, build_model
+from .model import Model
 
 Array = jnp.ndarray
 

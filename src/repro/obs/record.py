@@ -32,6 +32,17 @@ from typing import Any, IO
 import jax
 
 
+_default_device_cache: list = []
+
+
+def _default_device():
+    """The process-default device, enumerated once — `jax.devices()` per
+    telemetry poll would pay a backend-client query every iteration."""
+    if not _default_device_cache:
+        _default_device_cache.append(jax.devices()[0])
+    return _default_device_cache[0]
+
+
 def device_memory_stats(device=None) -> dict[str, float]:
     """Best-effort device memory counters, safe on every backend.
 
@@ -40,7 +51,7 @@ def device_memory_stats(device=None) -> dict[str, float]:
     run over a missing counter, so every failure mode maps to ``{}``.
     """
     try:
-        dev = device if device is not None else jax.devices()[0]
+        dev = device if device is not None else _default_device()
         stats = getattr(dev, "memory_stats", lambda: None)()
     except Exception:
         return {}

@@ -9,6 +9,8 @@ property testing but the same code paths get exercised.
 """
 from __future__ import annotations
 
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
+
 try:
     from hypothesis import given, settings, strategies as st
     HAVE_HYPOTHESIS = True

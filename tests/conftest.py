@@ -1,11 +1,44 @@
 """Shared fixtures. NOTE: no XLA device-count forcing here — smoke tests and
 benchmarks must see the real single CPU device; only launch/dryrun.py forces
-512 host devices (and runs as its own process)."""
+512 host devices (and runs as its own process).
+
+Also the trace-contract pytest plugin (docs/analysis.md): thin fixture
+wrappers over `repro.analysis.guards` so any test can pin XLA compile
+counts or wrap a hot loop in jax's transfer/leak guards without
+importing the package machinery."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import pytest
+
+from repro.analysis import guards as _guards
+
+
+@pytest.fixture
+def assert_compile_count():
+    """`with assert_compile_count(expected=0): ...` — fail on retraces.
+    Warm the exact call sequence up first (eager ops also compile)."""
+    return _guards.assert_compile_count
+
+
+@pytest.fixture
+def compile_counter():
+    """Context manager counting XLA backend compiles in a block."""
+    return _guards.CompileCounter
+
+
+@pytest.fixture
+def no_implicit_transfers():
+    """transfer_guard("disallow") context: implicit host->device
+    transfers inside the block raise."""
+    return _guards.no_implicit_transfers
+
+
+@pytest.fixture
+def no_tracer_leaks():
+    """jax.checking_leaks() context: escaped tracers raise."""
+    return _guards.no_tracer_leaks
 
 
 def three_loops(n_per: int = 40, loops: int = 3, dim: int = 16, seed: int = 0):

@@ -1,0 +1,31 @@
+"""RPR001 fixture: host syncs inside a hot scope (`fit_loop`)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def fit_loop(objective, X, n):
+    for _ in range(n):
+        E, G = objective.energy_and_grad(X)
+        e = float(E)                       # RPR001: tainted via unpack
+        g = float(jnp.linalg.norm(G))      # RPR001: direct device wrap
+        s = E.item()                       # RPR001: .item() sync
+        X = X - 0.1 * G
+        snap = np.asarray(G)               # RPR001: implicit transfer
+        dev = jax.devices()[0]             # RPR001: enumeration per iter
+    return X, e, g, s, snap, dev
+
+
+def fit_loop_clean(objective, X, n):
+    for _ in range(n):
+        E, G = objective.energy_and_grad(X)
+        # the sanctioned form: one explicit batched transfer
+        e, g = (float(v) for v in
+                jax.device_get((E, jnp.linalg.norm(G))))
+        X = X - 0.1 * G
+    return X, e, g
+
+
+def cold_path(cfg):
+    # not a hot scope: conversions here are fine
+    return float(jnp.asarray(cfg.scale))

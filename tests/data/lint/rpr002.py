@@ -1,0 +1,20 @@
+"""RPR002 fixture: PRNG key reuse without split/fold_in."""
+import jax
+
+
+def sample(key, n):
+    a = jax.random.normal(key, (n,))
+    b = jax.random.uniform(key, (n,))      # RPR002: key consumed twice
+    k1, k2 = jax.random.split(key)
+    c = jax.random.normal(k1, (n,))
+    d = jax.random.normal(k2, (n,))
+    return a + b + c + d
+
+
+def sample_clean(key, n):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (n,))
+    b = jax.random.uniform(k2, (n,))
+    key2 = jax.random.fold_in(key, 7)      # reassignment resets the use
+    c = jax.random.normal(key2, (n,))
+    return a + b + c

@@ -1,0 +1,28 @@
+"""RPR003 fixture: jit retrace hazards."""
+import functools
+
+import jax
+
+_config = {"scale": 2.0}
+LANE = 128          # UPPER_CASE module constants are treated as frozen
+
+
+@functools.partial(jax.jit, static_argnames=("kind",))
+def step(x, kind: str, mode: bool = False, opts={}):
+    # `kind` is declared static: fine.  `mode` (bool, not static)
+    # retraces per value; `opts` is a shared mutable default; `_config`
+    # is captured mutable module state.
+    del kind
+    if mode:
+        x = x * _config["scale"]
+    return x * LANE, opts
+
+
+@jax.jit
+def step_clean(x, scale):
+    return x * scale
+
+
+def plain(x, flag: bool = True):
+    # not jitted: python-valued args are fine
+    return x if flag else -x

@@ -1,0 +1,28 @@
+"""RPR004 fixture: Pallas BlockSpec tile-constraint violations."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def build(kernel, x, bm):
+    return pl.pallas_call(
+        kernel,
+        grid=(4, 4),
+        in_specs=[
+            pl.BlockSpec((12, 128), lambda i, j: (i, j)),   # RPR004: 12 % 8
+            pl.BlockSpec((8, 128), lambda i, j: (i, j),
+                         memory_space="smem"),              # RPR004: raw str
+        ],
+        out_specs=pl.BlockSpec((bm, 128), lambda i, j: (i, 0)),  # variable: ok
+        out_shape=jax.ShapeDtypeStruct((64, 128), jnp.float32),
+    )(x)
+
+
+def build_clean(kernel, x):
+    return pl.pallas_call(
+        kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((16, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),   # scalar block: ok
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+    )(x)

@@ -1,0 +1,11 @@
+"""RPR005 fixture: bf16 reductions without an f32 accumulator."""
+import jax.numpy as jnp
+
+
+def accumulate(x, w):
+    xb = x.astype(jnp.bfloat16)
+    total = jnp.sum(xb)                          # RPR005: bf16 accumulation
+    ok = jnp.sum(xb, dtype=jnp.float32)          # explicit accumulator: fine
+    xf = xb.astype(jnp.float32)
+    fine = jnp.sum(xf)                           # upcast first: fine
+    return total, ok, fine

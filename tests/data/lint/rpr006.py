@@ -1,0 +1,16 @@
+"""RPR006 fixture: DeprecationWarning without stacklevel=2."""
+import warnings
+
+
+def old_api():
+    warnings.warn("old_api is deprecated; use new_api",
+                  DeprecationWarning)                    # RPR006
+
+
+def good_api():
+    warnings.warn("good_api is deprecated; use new_api",
+                  DeprecationWarning, stacklevel=2)
+
+
+def unrelated():
+    warnings.warn("just a user warning")                 # not a deprecation

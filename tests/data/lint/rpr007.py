@@ -1,0 +1,9 @@
+"""RPR007 fixture: span() called but not used as a context manager."""
+from repro.obs import span
+
+
+def run(X):
+    span("solve-iter", it=0)          # RPR007: created and dropped
+    with span("compile", phase=True):
+        X = X + 1
+    return X

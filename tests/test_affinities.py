@@ -1,5 +1,4 @@
 """Perplexity calibration and affinity construction."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

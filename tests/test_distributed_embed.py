@@ -6,16 +6,9 @@ import sys
 import textwrap
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core import SD, energy_and_grad, make_affinities
-from repro.embed import (
-    DistributedEmbedding, EmbedConfig, EmbedMeshSpec,
-    make_block_jacobi_setup, make_block_jacobi_solve,
-    make_distributed_energy_grad, shard_pairwise, shard_rows,
-)
+from repro.embed import DistributedEmbedding, EmbedConfig
 from tests.conftest import three_loops
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.core import energy_and_grad, make_affinities
 from repro.embed import (EmbedMeshSpec, make_distributed_energy_grad,
-                         replicate, shard_pairwise)
+                         shard_pairwise)
 from tests.conftest import three_loops
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

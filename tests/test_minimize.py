@@ -1,5 +1,4 @@
 """Driver-level behaviour: line search, convergence accounting, homotopy."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

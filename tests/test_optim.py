@@ -1,8 +1,6 @@
 """Optimizer substrate: AdamW semantics, schedule, clipping, compression."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 from tests._hypothesis_compat import given, settings, st
 
 from repro.optim import adamw

@@ -1,5 +1,4 @@
 """Roofline module: param counts, MODEL_FLOPS, term formation."""
-import numpy as np
 import pytest
 
 from repro.configs import SHAPES, get_config

@@ -1,8 +1,5 @@
 """Sharding rule engine: divisibility fallbacks, axis reuse, FSDP expansion.
 Uses abstract meshes (no forced devices needed: AbstractMesh shapes only)."""
-import jax
-import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import fsdp_axes, spec_for

@@ -1,10 +1,8 @@
 """Theory-level checks tying the implementation to the paper's analysis."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (SD, LSConfig, energy, energy_and_grad,
                         make_affinities, minimize)
