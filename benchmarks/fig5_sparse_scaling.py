@@ -9,7 +9,8 @@ sampling), reports per N:
     calibration),
   * per-iteration wall-clock of the optimization step (energy + gradient +
     spectral-direction solve), dense (O(N^2 d), Cholesky backsolves) vs
-    sparse (O(N (k + m) d), Jacobi-CG),
+    sparse (O(N (k + m) d), Jacobi-CG) vs tree (deterministic Barnes-Hut
+    grid repulsion, O(N log N), sparse/farfield.py),
   * final (surrogate) energy after `iters` steps.
 
 The dense path is SKIPPED above `dense_cutoff` (default 5k: the dense
@@ -52,7 +53,8 @@ from repro.api import Embedding, EmbedSpec
 from repro.core import (energy_and_grad_sparse, is_normalized,
                         make_affinities)
 from repro.data import mnist_like
-from repro.sparse import (make_sd_operator, make_sharded_energy_grad,
+from repro.sparse import (energy_and_grad_tree, make_grid_plan,
+                          make_sd_operator, make_sharded_energy_grad,
                           make_sharded_sd_operator, pcg,
                           shard_sparse_affinities, sparse_affinities)
 
@@ -141,6 +143,28 @@ def sparse_point(Y: Array, kind: str, lam: float, iters: int,
                                                    n_negatives=m, key=key)
     return _time_sparse_iters(eg, matvec, inv_diag, Y.shape[0], iters,
                               t_build, normalized=is_normalized(kind))
+
+
+def tree_point(Y: Array, kind: str, lam: float, iters: int,
+               perplexity: float, k: int) -> dict:
+    """Deterministic Barnes-Hut column: same ELL attractive graph as the
+    sparse column, grid far-field repulsion instead of sampling — so the
+    iter_s delta is exactly the tree's price/win, and the energy column is
+    the true (unsampled) objective value."""
+    t0 = time.perf_counter()
+    saff = jax.block_until_ready(sparse_affinities(
+        Y, k=k, perplexity=perplexity, model=kind))
+    t_build = time.perf_counter() - t0
+
+    matvec, inv_diag, _ = make_sd_operator(saff.graph, saff.rev)
+    plan = make_grid_plan(Y.shape[0])
+    lam_ = jnp.asarray(lam, jnp.float32)
+    # no z state and no PRNG: the tree repulsion is exact under the grid,
+    # so normalized kinds use log(s) directly (normalized=False here just
+    # means "no streaming-Z threading" in the shared timing loop)
+    eg = lambda X, key: energy_and_grad_tree(X, saff, lam_, kind, plan)
+    return _time_sparse_iters(eg, matvec, inv_diag, Y.shape[0], iters,
+                              t_build, normalized=False)
 
 
 def sharded_point(Y: Array, mesh, kind: str, lam: float, iters: int,
@@ -242,6 +266,11 @@ def _run_one_model(ns, kind, lam, iters, perplexity, k, m, dense_cutoff,
                 f"{row['sparse']['build_s']:.2f}",
                 f"{row['sparse']['iter_s']:.4f}",
                 f"{row['sparse']['energy']:.6g}")
+        row["tree"] = tree_point(Y, kind, lam, iters, perplexity, k)
+        csv_row("fig5", kind, "tree", n,
+                f"{row['tree']['build_s']:.2f}",
+                f"{row['tree']['iter_s']:.4f}",
+                f"{row['tree']['energy']:.6g}")
         results[n] = row
     if devices:
         sharded = _run_sharded_sweep(devices, ns, kind, lam, iters,
@@ -252,9 +281,10 @@ def _run_one_model(ns, kind, lam, iters, perplexity, k, m, dense_cutoff,
     ns_run = sorted(results)
     if len(ns_run) >= 2:
         n0, n1 = ns_run[0], ns_run[-1]
-        t0, t1 = results[n0]["sparse"]["iter_s"], results[n1]["sparse"]["iter_s"]
-        csv_row("fig5", kind, "sparse-scaling-exponent", f"{n0}->{n1}",
-                f"{np.log(max(t1, 1e-9) / max(t0, 1e-9)) / np.log(n1 / n0):.2f}")
+        for col in ("sparse", "tree"):
+            t0, t1 = results[n0][col]["iter_s"], results[n1][col]["iter_s"]
+            csv_row("fig5", kind, f"{col}-scaling-exponent", f"{n0}->{n1}",
+                    f"{np.log(max(t1, 1e-9) / max(t0, 1e-9)) / np.log(n1 / n0):.2f}")
     return results
 
 
@@ -283,7 +313,8 @@ def run(ns=(2000, 10_000, 50_000), models=("ee",), lam=None, iters=10,
                 merged = {}
             if merged and not any(
                     isinstance(v, dict) and
-                    any(c in v for c in ("dense", "sparse", "sharded"))
+                    any(c in v for c in ("dense", "sparse", "sharded",
+                                         "tree"))
                     for row in merged.values() if isinstance(row, dict)
                     for v in row.values()):
                 merged = {}     # pre-model-column schema: start fresh

@@ -15,8 +15,13 @@ Two halves of one correctness story:
     see: `assert_compile_count` turns XLA retraces into test failures,
     `no_implicit_transfers` / `no_tracer_leaks` wrap hot loops in jax's
     transfer and leak guards.
+
+Plus the documentation analogue: docsnippets.py extracts and executes
+every fenced ```python block in docs/*.md (`python -m
+repro.analysis.docsnippets docs`), so examples are contracts too.
 """
 from .baseline import Baseline, load_baseline, write_baseline
+from .docsnippets import Snippet, extract_snippets, run_file
 from .guards import (CompileCounter, assert_compile_count, jit_cache_size,
                      no_implicit_transfers, no_tracer_leaks)
 from .lint import Finding, lint_file, lint_paths
@@ -27,6 +32,9 @@ __all__ = [
     "Baseline",
     "CompileCounter",
     "Finding",
+    "Snippet",
+    "extract_snippets",
+    "run_file",
     "assert_compile_count",
     "jit_cache_size",
     "lint_file",

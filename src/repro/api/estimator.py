@@ -80,10 +80,12 @@ class Embedding:
     def fit(self, Y: Array | None, X0: Array | None = None,
             aff=None,
             callback: Callable[..., None] | None = None,
-            *, telemetry=None) -> "Embedding":
+            *, saff=None, telemetry=None) -> "Embedding":
         """Fit the embedding.  `Y` is the (N, D) data; the dense backend
         alternatively accepts precomputed `aff=` (core.Affinities) so
-        benchmark drivers can share one calibration across strategies.
+        benchmark drivers can share one calibration across strategies, and
+        the sparse/tree backends accept `saff=` (sparse.SparseAffinities)
+        — the ELL analogue — so strategy sweeps share one k-NN build.
 
         `telemetry` switches on run observability (`repro.obs`): pass
         `True` for in-memory recording, a directory path to also write
@@ -91,12 +93,24 @@ class Embedding:
         full control.  After the fit, `self.telemetry_` holds the
         finalized object (`.summary()`, `.recorder.records`, …) and
         `result_.diagnostics` the per-iteration dict table."""
+        if aff is not None and saff is not None:
+            raise ValueError("pass aff= (dense) or saff= (sparse), not "
+                             "both — they pin different backends")
         tel = resolve_telemetry(telemetry)
-        n = Y.shape[0] if Y is not None else aff.Wp.shape[0]
+        if Y is not None:
+            n = Y.shape[0]
+        elif aff is not None:
+            n = aff.Wp.shape[0]
+        else:
+            n = saff.graph.n
         if aff is not None and self.spec.backend == "auto":
             # precomputed dense affinities pin the backend: only the dense
             # path can consume them, whatever N would otherwise resolve to
             backend = "dense"
+        elif saff is not None and self.spec.backend == "auto":
+            # the sparse analogue: a prebuilt ELL graph pins the sparse
+            # path (the user may still request backend="tree" explicitly)
+            backend = "sparse"
         else:
             backend = self._resolve_backend(n)
         registries.validate_strategy_backend(self.spec.strategy, backend)
@@ -106,7 +120,8 @@ class Embedding:
                                   strategy=self.spec.strategy, n=int(n))
         try:
             res: EngineResult = fit_fn(
-                self.spec, Y, X0=X0, aff=aff, mesh=self._mesh_for(backend),
+                self.spec, Y, X0=X0, aff=aff, saff=saff,
+                mesh=self._mesh_for(backend),
                 mesh_spec=self.mesh_spec, callback=callback, telemetry=tel)
         finally:
             if tel is not None:

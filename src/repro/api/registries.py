@@ -9,12 +9,14 @@ public API treats them as registry entries, not as hard-wired code paths:
     matrix-free Jacobi-PCG spectral solve and its diagonal degenerations),
     so ``strategy="gd"|"fp"|"diag"|"sd"|"sd-"`` is one knob on every
     backend that supports it;
-  * the BACKEND registry names the four fitting paths grown over the
+  * the BACKEND registry names the fitting paths grown over the
     previous PRs — ``dense`` (single device, fused jitted step),
     ``dense-mesh`` (2-D-sharded affinities + block-Jacobi), ``sparse``
-    (ELL neighbor graph + negative sampling) and ``sparse-sharded``
-    (row-sharded ELL on a mesh) — plus ``backend="auto"``, which picks by
-    problem size and device count.
+    (ELL neighbor graph + negative sampling), ``sparse-sharded``
+    (row-sharded ELL on a mesh) and ``tree`` (deterministic Barnes-Hut
+    grid repulsion, opt-in) — plus ``backend="auto"``, which picks by
+    problem size and device count (``tree`` stays opt-in: it is 2-D
+    only and trades a little far-field bias for determinism).
 
 Each strategy entry records which backends can realize it.  The dense
 backend runs every strategy (it holds the full affinity matrix, so even
@@ -27,9 +29,9 @@ strategy, so ``EmbedSpec(strategy="sd-")`` never errors at auto-resolve
 time.
 
 Registration is open: `register_strategy` / `register_backend` let
-downstream code add entries (e.g. a Barnes-Hut repulsion backend) without
-touching this module; `EmbedSpec` validation picks the new names up
-automatically.
+downstream code add entries without touching this module (the built-in
+``tree`` backend arrived exactly this way); `EmbedSpec` validation picks
+the new names up automatically.
 """
 from __future__ import annotations
 
@@ -188,7 +190,7 @@ def resolve_backend(backend: str, *, n: int, n_devices: int,
 
 # -- built-in registrations -----------------------------------------------------
 
-_ALL_BACKENDS = ("dense", "dense-mesh", "sparse", "sparse-sharded")
+_ALL_BACKENDS = ("dense", "dense-mesh", "sparse", "sparse-sharded", "tree")
 
 register_backend("dense", doc="single device, full affinities, fused "
                               "jitted step (core/minimize.py)")
@@ -200,6 +202,8 @@ register_backend("sparse", doc="ELL neighbor graph + negative sampling, "
 register_backend("sparse-sharded", needs_mesh=True,
                  doc="row-sharded ELL graph, replicated-X epochs "
                      "(sparse/sharding.py)")
+register_backend("tree", doc="deterministic Barnes-Hut grid repulsion, "
+                             "O(N log N), 2-D only (docs/farfield.md)")
 
 register_strategy(
     "gd", backends=_ALL_BACKENDS,

@@ -73,6 +73,10 @@ class EmbedSpec:
                                    # 'auto' = Pallas on TPU, jnp elsewhere
     kernel_precision: str = "float32"   # 'float32' | 'bfloat16' storage
                                         # (accumulation is always f32)
+    # Barnes-Hut tree backend (docs/farfield.md)
+    theta: float = 0.5            # opening criterion; 0 = exact (O(N^2))
+    tree_depth: int = 0           # finest grid level; 0 => auto (log4 N/4)
+    tree_cap: int = 0             # listed near-field slots; 0 => auto
 
     def __post_init__(self):
         validate_kind(self.kind)
@@ -89,6 +93,16 @@ class EmbedSpec:
             raise ValueError(
                 f"unknown kernel_precision {self.kernel_precision!r}; "
                 f"have {STORAGE_DTYPES}")
+        if not 0.0 <= self.theta <= 1.0:
+            raise ValueError(
+                f"theta must be in [0, 1] (the Barnes-Hut opening "
+                f"criterion; 0 = exact), got {self.theta!r}")
+        for name in ("tree_depth", "tree_cap"):
+            v = getattr(self, name)
+            if not isinstance(v, int) or v < 0:
+                raise ValueError(
+                    f"EmbedSpec.{name} must be a non-negative int "
+                    f"(0 = auto), got {v!r}")
 
     def kernel_args(self) -> dict:
         """The `kernels.ops` dispatch kwargs this spec selects — empty at

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
-from repro.kernels.ref import KINDS, PairwiseTerms
+from repro.kernels.ref import KINDS, PairwiseTerms, negative_pair_terms
 
 from .affinities import Affinities, sq_distances
 
@@ -125,24 +125,9 @@ def directed_lap_apply(w: Array, x: Array, xj: Array) -> Array:
             - jnp.einsum("nk,nkd->nd", w, xj))
 
 
-def negative_pair_terms(kind: str, t: Array) -> tuple[Array, Array]:
-    """Per-pair repulsive terms (s_pair, b) at squared distances t, for ALL
-    kinds (W- = 1 off-diagonal): s_pair sums to the repulsive term s — for
-    normalized models that sum IS the partition function Z — and b is the
-    gradient-Laplacian weight of the pair.  The normalized kinds share the
-    unnormalized formulas (kernels/ref.py contract): ssne pairs like ee
-    (Gaussian), tsne like tee (Student-t).  Shared by the sampled negatives
-    here and the row-sharded backend (sparse/sharding.py) — the two must
-    stay numerically identical for multi-device parity."""
-    if kind in ("ee", "ssne"):
-        s_pair = jnp.exp(-t)
-        return s_pair, s_pair
-    if kind in ("tee", "tsne"):
-        K = 1.0 / (1.0 + t)
-        return K, K * K
-    if kind == "epan":
-        return jnp.maximum(1.0 - t, 0.0), (t < 1.0).astype(t.dtype)
-    raise ValueError(f"unknown kind {kind!r}")
+# negative_pair_terms moved to kernels/ref.py (the Barnes-Hut cell kernel
+# evaluates it inside a Pallas body, and the kernel layer cannot import
+# the objective layer back); re-exported above for its existing callers.
 
 
 def attractive_edge_terms(kind: str, w: Array, t: Array) -> tuple[Array, Array]:
@@ -160,6 +145,43 @@ def attractive_edge_terms(kind: str, w: Array, t: Array) -> tuple[Array, Array]:
     if kind == "tsne":
         return w * jnp.log1p(t), w / (1.0 + t)
     return w * t, w
+
+
+def sparse_attractive_terms(X: Array, saff, kind: str) -> tuple[Array, Array]:
+    """Exact attractive terms over the calibrated ELL graph: the energy
+    `e_plus = sum_edges e_pair` and the per-edge attractive gradient
+    weights `aw` (see `attractive_edge_terms`).  Shared by the sampled
+    estimator below and the deterministic Barnes-Hut path
+    (sparse/farfield.py) — the attractive side is identical in both; only
+    the repulsion estimator differs."""
+    g = saff.graph
+    t_att = jnp.sum((X[:, None, :] - X[g.indices]) ** 2, axis=-1)  # (N, k)
+    e_pair, aw = attractive_edge_terms(kind, g.weights, t_att)
+    return jnp.sum(e_pair), aw
+
+
+def sparse_attractive_lap(X: Array, saff, kind: str, aw: Array) -> Array:
+    """The attractive Laplacian product la_x = L(a) X over the implicit
+    symmetric W+ = (A + A^T)/2, gather-only.  For every kind but t-SNE the
+    attractive weights equal W+ itself so this is `sym_lap_matvec`; t-SNE
+    reweights each edge by K = 1/(1+t) — X-dependent, but a pure function
+    of the SYMMETRIC pair distance, so both symmetrization halves stay
+    local row gathers (the reverse-graph edge recomputes its K from its
+    own distance instead of fetching the forward edge's value)."""
+    from repro.sparse.linalg import sym_lap_matvec
+
+    g = saff.graph
+    rev = getattr(saff, "rev", None)
+    if kind == "tsne":
+        if rev is None:
+            raise ValueError(
+                "sparse tsne needs the precomputed reverse graph (saff.rev) "
+                "to keep the K-reweighted transpose half gather-only")
+        t_ratt = jnp.sum((X[:, None, :] - X[rev.indices]) ** 2, axis=-1)
+        arw = attractive_edge_terms(kind, rev.weights, t_ratt)[1]
+        return 0.5 * (directed_lap_apply(aw, X, X[g.indices])
+                      + directed_lap_apply(arw, X, X[rev.indices]))
+    return sym_lap_matvec(g, X, rev=rev)
 
 
 @functools.partial(jax.jit,
@@ -223,23 +245,17 @@ def energy_and_grad_sparse(
     (z = s_hat = Z exactly: there is no variance left to smooth), so the
     normalized gradient matches the dense path at k = N-1.
     """
-    from repro.sparse.linalg import sym_lap_matvec
-
     normalized = is_normalized(kind)
     if return_state and not normalized:
         raise ValueError(
             f"return_state threads the partition-function estimate, which "
             f"only normalized kinds carry (got {kind!r})")
-    g = saff.graph
-    rev = getattr(saff, "rev", None)
     n = X.shape[0]
 
     # attractive: exact over the ELL edges.  sum_nm W+_nm f(t_nm) equals
     # the directed sum (f and t are symmetric), so no transpose pass is
     # needed for E.
-    t_att = jnp.sum((X[:, None, :] - X[g.indices]) ** 2, axis=-1)  # (N, k)
-    e_pair, aw = attractive_edge_terms(kind, g.weights, t_att)
-    e_plus = jnp.sum(e_pair)
+    e_plus, aw = sparse_attractive_terms(X, saff, kind)
 
     # repulsive: cyclic-shift negatives (all N-1 shifts when exhaustive)
     exhaustive = n_negatives is None or n_negatives >= n - 1
@@ -274,19 +290,7 @@ def energy_and_grad_sparse(
         # none of the Laplacian products
         return (E, None, z) if return_state else (E, None)
 
-    if kind == "tsne":
-        # X-dependent attractive weights: both symmetrization halves as
-        # K-reweighted local gathers ((A o K)^T = A^T o K, K symmetric)
-        if rev is None:
-            raise ValueError(
-                "sparse tsne needs the precomputed reverse graph (saff.rev) "
-                "to keep the K-reweighted transpose half gather-only")
-        t_ratt = jnp.sum((X[:, None, :] - X[rev.indices]) ** 2, axis=-1)
-        arw = attractive_edge_terms(kind, rev.weights, t_ratt)[1]
-        la_x = 0.5 * (directed_lap_apply(aw, X, X[g.indices])
-                      + directed_lap_apply(arw, X, X[rev.indices]))
-    else:
-        la_x = sym_lap_matvec(g, X, rev=rev)
+    la_x = sparse_attractive_lap(X, saff, kind, aw)
 
     # symmetric Laplacian product over the sampled edges, gather-only:
     # forward slot j is shift +s_j with weights b[:, j]; the transpose is

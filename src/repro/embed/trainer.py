@@ -46,11 +46,12 @@ from repro.core.linesearch import LSConfig
 from repro.core.objectives import attractive_weights
 from repro.core.strategies import _jitter
 from repro.obs import span
-from repro.sparse import (make_sd_operator, make_sharded_energy_grad,
+from repro.sparse import (energy_and_grad_tree, make_grid_plan,
+                          make_sd_operator, make_sharded_energy_grad,
                           make_sharded_sd_operator, pcg,
                           shard_sparse_affinities, sparse_affinities,
                           sparse_laplacian_eigenmaps, to_dense,
-                          validate_sparse_mesh)
+                          tree_diagnostics, validate_sparse_mesh)
 
 from .distributed import (
     EmbedMeshSpec,
@@ -270,6 +271,34 @@ class _NormalizedSparseObjective(_SparseObjective):
         return {k: float(v) for k, v in host.items()}
 
 
+class _TreeObjective(_SparseObjective):
+    """Deterministic Barnes-Hut backend (sparse/farfield.py): same closure
+    shape as the sparse objective, but nothing is sampled — the engine's
+    deterministic path applies (no per-iteration key, the accepted
+    energy is reused instead of re-evaluated, checkpoint resume is
+    bit-identical without carried estimator state).  `diagnostics()`
+    adds the grid decomposition health (cells visited, realized opening
+    ratio, residual spill, the pair-partition invariant) computed lazily
+    from the last evaluated X — only paid when telemetry is attached."""
+
+    stochastic = False
+
+    def __init__(self, eg, e_only, solve, X0, plan, place=None):
+        super().__init__(eg, e_only, solve, X0, place=place)
+        self._plan = plan
+        self._last_X = X0
+
+    def energy_and_grad(self, X, key):
+        self._last_X = X
+        return self._eg(X, key)
+
+    def diagnostics(self) -> dict:
+        tree = tree_diagnostics(self._last_X, self._plan)
+        # batch grid health with the solver diagnostics (RPR001)
+        host = jax.device_get({**self._solver_diag, **tree})
+        return {k: float(v) for k, v in host.items()}
+
+
 # -- backend builders -----------------------------------------------------------
 
 
@@ -345,24 +374,16 @@ def _sparse_spectral_init(cfg, saff, n: int) -> Array:
         saff.graph, saff.rev, d=cfg.dim, seed=cfg.seed) * 0.1
 
 
-def build_sparse_objective(cfg, mesh: Mesh | None = None,
-                           mspec: EmbedMeshSpec | None = None,
-                           Y: Array | None = None,
-                           X0: Array | None = None,
-                           strategy: str = "sd",
-                           sharded: bool = False):
-    """(objective, X) for the sparse neighbor-graph backend, O(N (k + m) d)
-    per iteration: ELL affinities, negative-sampled repulsion, matrix-free
-    direction solves.  `sharded=True` row-shards the graph over the mesh
-    (sparse/sharding.py).
-
-    Strategies: ``sd`` (Jacobi-PCG on B = 4 L(W+) + mu I, warm-started),
-    ``fp`` (the SAME system's Jacobi diagonal applied directly — B's exact
-    inverse restricted to its diagonal 4 D+ + mu, the paper's fixed-point
-    iteration over the sparse graph) and ``gd``.
-    """
-    normalized = is_normalized(cfg.kind)
-    n = Y.shape[0]
+def _resolve_saff(cfg, Y, saff, n: int):
+    """The calibrated ELL affinities: the caller's precomputed `saff`
+    when given (the `fit(saff=...)` path — strategy/backend sweeps share
+    one k-NN build), else built from Y."""
+    if saff is not None:
+        if saff.graph.n != n:
+            raise ValueError(
+                f"precomputed saff has {saff.graph.n} rows but the fit "
+                f"is over n={n} points")
+        return saff
     k = cfg.n_neighbors or min(int(3 * cfg.perplexity), n - 1)
     if k < cfg.perplexity:
         raise ValueError(
@@ -370,6 +391,56 @@ def build_sparse_objective(cfg, mesh: Mesh | None = None,
             f"k-candidate entropy cannot reach log(perplexity), so the "
             f"calibration would silently degenerate to uniform weights; "
             f"use n_neighbors >= 3 * perplexity (or 0 for auto)")
+    return sparse_affinities(jnp.asarray(Y), k=k,
+                             perplexity=cfg.perplexity, model=cfg.kind,
+                             method=cfg.knn_method)
+
+
+def _make_direction_solve(strategy: str, matvec, inv_diag, cfg,
+                          backend: str):
+    """The jitted `solve(G, P0) -> (P, diag)` closure shared by the
+    matrix-free backends (sparse, sparse-sharded, tree): Jacobi-PCG on
+    B = 4 L(W+) + mu I for ``sd``, its diagonal for ``fp``, identity for
+    ``gd``."""
+    if strategy == "sd":
+        @jax.jit
+        def solve(G, P0):
+            # surface the PCG counters the solver computes anyway — two
+            # extra scalar outputs, no extra work in the jitted program
+            r = pcg(matvec, -G, P0, inv_diag=inv_diag,
+                    tol=cfg.cg_tol, maxiter=cfg.cg_maxiter)
+            return r.x, {"pcg_iters": r.n_iters,
+                         "pcg_residual": r.rel_residual}
+        return solve
+    if strategy == "fp":
+        return jax.jit(lambda G, P0: (-inv_diag[:, None] * G, {}))
+    if strategy == "gd":
+        return jax.jit(lambda G, P0: (-G, {}))
+    raise ValueError(
+        f"strategy {strategy!r} is not available on the {backend} "
+        f"backends (have 'sd', 'fp', 'gd')")
+
+
+def build_sparse_objective(cfg, mesh: Mesh | None = None,
+                           mspec: EmbedMeshSpec | None = None,
+                           Y: Array | None = None,
+                           X0: Array | None = None,
+                           strategy: str = "sd",
+                           sharded: bool = False,
+                           saff=None):
+    """(objective, X) for the sparse neighbor-graph backend, O(N (k + m) d)
+    per iteration: ELL affinities, negative-sampled repulsion, matrix-free
+    direction solves.  `sharded=True` row-shards the graph over the mesh
+    (sparse/sharding.py).  A precomputed `saff` (sparse.SparseAffinities)
+    skips the k-NN build — the `fit(saff=...)` path.
+
+    Strategies: ``sd`` (Jacobi-PCG on B = 4 L(W+) + mu I, warm-started),
+    ``fp`` (the SAME system's Jacobi diagonal applied directly — B's exact
+    inverse restricted to its diagonal 4 D+ + mu, the paper's fixed-point
+    iteration over the sparse graph) and ``gd``.
+    """
+    normalized = is_normalized(cfg.kind)
+    n = Y.shape[0] if Y is not None else saff.graph.n
     if sharded:
         if mesh is None:
             raise ValueError("the sparse-sharded backend needs a mesh")
@@ -378,9 +449,7 @@ def build_sparse_objective(cfg, mesh: Mesh | None = None,
         # fail fast on unusable mesh shapes, before the k-NN build
         validate_sparse_mesh(mesh, mspec.row_axes)
     lam = jnp.asarray(cfg.lam, jnp.float32)
-    saff = sparse_affinities(jnp.asarray(Y), k=k,
-                             perplexity=cfg.perplexity, model=cfg.kind,
-                             method=cfg.knn_method)
+    saff = _resolve_saff(cfg, Y, saff, n)
     if X0 is not None:
         X = jnp.asarray(X0)
     else:
@@ -441,26 +510,53 @@ def build_sparse_objective(cfg, mesh: Mesh | None = None,
 
         place = None
 
-    if strategy == "sd":
-        @jax.jit
-        def solve(G, P0):
-            # surface the PCG counters the solver computes anyway — two
-            # extra scalar outputs, no extra work in the jitted program
-            r = pcg(matvec, -G, P0, inv_diag=inv_diag,
-                    tol=cfg.cg_tol, maxiter=cfg.cg_maxiter)
-            return r.x, {"pcg_iters": r.n_iters,
-                         "pcg_residual": r.rel_residual}
-    elif strategy == "fp":
-        solve = jax.jit(lambda G, P0: (-inv_diag[:, None] * G, {}))
-    elif strategy == "gd":
-        solve = jax.jit(lambda G, P0: (-G, {}))
-    else:
-        raise ValueError(
-            f"strategy {strategy!r} is not available on the sparse "
-            f"backends (have 'sd', 'fp', 'gd')")
-
+    solve = _make_direction_solve(strategy, matvec, inv_diag, cfg, "sparse")
     obj_cls = _NormalizedSparseObjective if normalized else _SparseObjective
     return obj_cls(eg, e_only, solve, X, place=place), X
+
+
+def build_tree_objective(cfg, Y: Array | None = None,
+                         X0: Array | None = None,
+                         strategy: str = "sd",
+                         saff=None):
+    """(objective, X) for the deterministic Barnes-Hut backend
+    (sparse/farfield.py): exact ELL attractive terms + grid far-field
+    repulsion under the `cfg.theta` opening criterion.  O(N log N) per
+    iteration, no PRNG or EMA anywhere — repeated fits are bit-identical.
+    2-D embeddings only (the grid is a quadtree); the direction solves
+    are the same matrix-free sd/fp/gd family as the sparse backend (the
+    spectral system only sees the attractive graph)."""
+    if cfg.dim != 2:
+        raise ValueError(
+            f"the tree backend is 2-D only (quadtree far field); "
+            f"got dim={cfg.dim} — use the sparse backend for other dims")
+    n = Y.shape[0] if Y is not None else saff.graph.n
+    lam = jnp.asarray(cfg.lam, jnp.float32)
+    saff = _resolve_saff(cfg, Y, saff, n)
+    if X0 is not None:
+        X = jnp.asarray(X0)
+    else:
+        with span("spectral-init", phase=True, n=n):
+            X = jax.block_until_ready(_sparse_spectral_init(cfg, saff, n))
+
+    plan = make_grid_plan(
+        n, theta=cfg.theta, depth=getattr(cfg, "tree_depth", 0),
+        cap=getattr(cfg, "tree_cap", 0))
+    kernel_args = cfg.kernel_args() if hasattr(cfg, "kernel_args") else {}
+
+    def eg(X, key):
+        return energy_and_grad_tree(X, saff, lam, cfg.kind, plan,
+                                    **kernel_args)
+
+    def e_only(X, key):
+        return energy_and_grad_tree(X, saff, lam, cfg.kind, plan,
+                                    with_grad=False, **kernel_args)[0]
+
+    matvec, inv_diag, _ = make_sd_operator(saff.graph, saff.rev,
+                                           cfg.mu_scale, **kernel_args)
+    solve = _make_direction_solve(strategy, matvec, inv_diag, cfg, "tree")
+    obj = _TreeObjective(eg, e_only, solve, X, plan)
+    return obj, X
 
 
 class DistributedEmbedding:

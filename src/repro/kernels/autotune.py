@@ -142,8 +142,10 @@ def _save_disk() -> None:
 # O(bucket^2) for the pairwise kernel and O(bucket * k) for the ELL ones,
 # so buckets saturate where the search itself would get expensive.  Keys
 # saturate with them: every N above the cap shares the cap's config.
-_BUCKET_CAP = {"pairwise": 2048, "ell": 65536, "ell_local": 65536}
-_INTERPRET_BUCKET_CAP = {"pairwise": 512, "ell": 4096, "ell_local": 4096}
+_BUCKET_CAP = {"pairwise": 2048, "ell": 65536, "ell_local": 65536,
+               "bh": 65536}
+_INTERPRET_BUCKET_CAP = {"pairwise": 512, "ell": 4096, "ell_local": 4096,
+                         "bh": 4096}
 
 
 def shape_bucket(kernel: str, n: int, interpret: bool) -> int:

@@ -1,0 +1,116 @@
+"""Barnes-Hut cell-interaction kernel (Pallas TPU).
+
+Computes, per row tile, the far-field repulsion contract of
+`kernels/ref.py::bh_interaction_ref`: each row n gathers W targets
+(cell centers-of-mass, near-field points, or residual-group COMs —
+sparse/farfield.py decides which) from a resident table and accumulates
+
+    s_n = sum_j w_nj * sp(t_nj)            (the partition-function share)
+    F_n = sum_j w_nj * b(t_nj) (x_n - c_j) (the repulsive Laplacian row)
+
+with (sp, b) = negative_pair_terms(kind, t) and t the squared distance to
+the target.  Layout and conventions mirror the ELL gather kernel
+(sparse_attractive.py):
+
+  * grid over row tiles; idx/w/x-row tiles stream through VMEM, the
+    target table is resident whole (index map pinned to block (0, 0)) —
+    tables are cell-aggregate grids (4^level rows), far smaller than X;
+    when the table IS X (the near-field listed pairs at large N) ops.py
+    falls back to the jnp oracle above the VMEM budget instead of
+    dispatching here,
+  * the target gather is a vector gather on the sublane axis (jnp.take),
+  * inputs may be stored in bf16; the arithmetic upcasts after the gather
+    and accumulates in f32, outputs are always f32,
+  * d is pre-padded to the lane width and N to the tile size by ops.py;
+    padding rows carry w = 0, which contributes exactly zero (the same
+    masking invariant that covers rejected cells, empty cells and self
+    pairs — see bh_interaction_ref).
+
+The per-slot squared distance is computed Gram-style
+(|x|^2 + |c|^2 - 2 x.c, the x.c term on the MXU) so the (TR, W, dp)
+difference tensor is never materialized — with lane-padded dp = 128 that
+tensor would blow the VMEM budget at the far-field slot widths.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import negative_pair_terms
+
+
+def _bh_kernel(idx_ref, w_ref, x_row_ref, tab_ref, s_ref, f_ref, *, kind):
+    idx = idx_ref[...]                                  # (TR, W) int32
+    w = w_ref[...].astype(jnp.float32)                  # (TR, W)
+    x = x_row_ref[...].astype(jnp.float32)              # (TR, dp)
+    tab = tab_ref[...]                                  # (M, dp) storage dtype
+
+    tr, width = idx.shape
+    g = jnp.take(tab, idx.reshape(-1), axis=0,
+                 unique_indices=False, indices_are_sorted=False)
+    g = g.reshape(tr, width, tab.shape[-1]).astype(jnp.float32)
+
+    # t via the Gram identity: the cross term runs on the MXU and the
+    # (TR, W, dp) difference tensor is never formed
+    xg = jax.lax.dot_general(
+        x[:, None, :], g, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )[:, 0, :]                                           # (TR, W)
+    t = (jnp.sum(x * x, axis=-1, keepdims=True)
+         + jnp.sum(g * g, axis=-1) - 2.0 * xg)
+    t = jnp.maximum(t, 0.0)
+
+    sp, b = negative_pair_terms(kind, t)
+    wb = w * b
+    acc = jax.lax.dot_general(
+        wb[:, None, :], g, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )[:, 0, :]                                           # (TR, dp)
+    f_ref[...] = jnp.sum(wb, axis=-1, keepdims=True) * x - acc
+    s_ref[...] = jnp.broadcast_to(
+        jnp.sum(w * sp, axis=-1, keepdims=True), s_ref.shape)
+
+
+def bh_interaction_pallas(
+    X: jnp.ndarray,          # (N, dp) — dp lane-padded by ops.py
+    idx: jnp.ndarray,        # (N, W) int32, in-range rows of `table`
+    w: jnp.ndarray,          # (N, W)
+    table: jnp.ndarray,      # (M, dp) — resident whole in VMEM
+    kind: str,
+    *,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pallas implementation of ref.bh_interaction_ref, vmem layout.
+
+    Requires N % block_rows == 0 (ops.py pads with w = 0 rows) and both
+    X and table lane-padded.  Returns (s (N,), F (N, dp)) in f32; the s
+    output rides a (N, 128) lane-padded buffer, column 0 is the value."""
+    n, dp = X.shape
+    assert n % block_rows == 0, (n, block_rows)
+    width = idx.shape[1]
+    m = table.shape[0]
+
+    s, f = pl.pallas_call(
+        functools.partial(_bh_kernel, kind=kind),
+        grid=(n // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, width), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, width), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, dp), lambda i: (i, 0)),
+            pl.BlockSpec((m, dp), lambda i: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_rows, 128), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, dp), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((n, 128), jnp.float32),
+            jax.ShapeDtypeStruct((n, dp), jnp.float32),
+        ),
+        interpret=interpret,
+    )(idx, w, X, table)
+    return s[:, 0], f

@@ -49,8 +49,10 @@ import jax.numpy as jnp
 from repro.obs import current_tracer, span
 
 from . import autotune
+from .farfield import bh_interaction_pallas
 from .pairwise import pairwise_terms_pallas
-from .ref import KINDS, PairwiseTerms, ell_lap_matvec_ref, pairwise_terms_ref
+from .ref import (KINDS, PairwiseTerms, bh_interaction_ref,
+                  ell_lap_matvec_ref, pairwise_terms_ref)
 from .sparse_attractive import (ell_lap_matvec_local_pallas,
                                 ell_lap_matvec_pallas,
                                 ell_lap_matvec_pallas_hbm)
@@ -371,6 +373,122 @@ def pairwise_terms(
         return _pairwise_pallas(X, Wa, Wb, kind=kind, block_rows=br,
                                 block_cols=bc, interpret=interpret,
                                 lane=lane, storage=storage)
+
+
+# -- Barnes-Hut cell interaction -------------------------------------------------
+
+# VMEM the gathered target tensor (block_rows, W, lane) f32 may claim in
+# the Pallas body; candidates whose tile would exceed it are pruned.
+_BH_GATHER_BUDGET = 4 * 1024 * 1024
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "storage"))
+def _bh_jnp(X, idx, w, table, kind, storage):
+    if storage == "bfloat16":
+        # w stays f32: it carries cell occupancies (exact small integers)
+        X = X.astype(jnp.bfloat16).astype(jnp.float32)
+        table = table.astype(jnp.bfloat16).astype(jnp.float32)
+    return bh_interaction_ref(X, idx, w, table, kind)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kind", "block_rows", "interpret", "lane", "storage"))
+def _bh_pallas(X, idx, w, table, *, kind, block_rows, interpret, lane,
+               storage):
+    n, d = X.shape
+    n_pad = _round_up(n, block_rows)
+    dp = max(lane, d)
+    Xp = _pad_to(_maybe_bf16(X.astype(jnp.float32), storage), n_pad, dp)
+    tab_p = _pad_to(_maybe_bf16(table.astype(jnp.float32), storage),
+                    table.shape[0], dp)
+    idx_p = jnp.pad(idx.astype(jnp.int32), ((0, n_pad - n), (0, 0)))
+    w_p = _pad_to(w.astype(jnp.float32), n_pad, w.shape[1])
+    s, F = bh_interaction_pallas(
+        Xp, idx_p, w_p, tab_p, kind, block_rows=block_rows,
+        interpret=interpret)
+    return s[:n], F[:n, :d]
+
+
+def bh_interaction(
+    X: jnp.ndarray,          # (N, d)
+    idx: jnp.ndarray,        # (N, W) int32, rows of `table`
+    w: jnp.ndarray,          # (N, W) slot weights (0 = masked)
+    table: jnp.ndarray,      # (M, d) interaction targets
+    kind: str,
+    *,
+    impl: str | None = None,
+    use_pallas: bool | None = None,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+    lane: int = 128,
+    storage_dtype=None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Barnes-Hut cell interaction (s_n, F_n); see kernels/ref.py
+    `bh_interaction_ref` for the contract and the module docstring for
+    the dispatch ladder.  The Pallas path keeps the whole target table
+    resident in VMEM, so requests whose table exceeds the VMEM budget
+    fall back to jnp with reason ``"vmem-cap"`` (there is no HBM layout
+    for this kernel — tables that big mean the near field is being fed
+    raw X, which the jnp gather handles fine)."""
+    if kind not in KINDS:
+        raise ValueError(f"unknown kind {kind!r}")
+    impl = _resolve_impl(impl, use_pallas)
+    storage = _resolve_storage(storage_dtype)
+    n, d = X.shape
+    width = idx.shape[1]
+    m = table.shape[0]
+    dp = max(lane, d)
+
+    reason = None
+    if impl == "jnp" or (impl == "auto" and not _on_tpu()):
+        reason = "forced-off" if impl == "jnp" else "no-tpu"
+    else:
+        itemsize = 2 if storage == "bfloat16" else 4
+        if m * dp * itemsize > vmem_x_budget():
+            reason = "vmem-cap"
+    if reason is not None:
+        info = {"path": "jnp", "reason": reason, "storage": storage}
+        _record("bh_interaction", info)
+        with span("kernel/bh_interaction", n=n, w=width, m=m, kind=kind,
+                  **info):
+            return _bh_jnp(X, idx, w, table, kind, storage)
+
+    reason = "tpu-default" if impl == "auto" else "forced-on"
+    if interpret is None:
+        interpret = impl == "pallas-interpret" or not _on_tpu()
+    sub = sublane(storage)
+    autotuned = cache_hit = False
+    if block_rows is not None:
+        br = legal_tile(block_rows, n, sub)
+    else:
+        cands = [c for c in autotune.ell_candidates(
+                     n=n, sublane=sub, layouts=["vmem"], interpret=interpret)
+                 if c.block_rows * width * dp * 4 <= _BH_GATHER_BUDGET]
+        if not cands:
+            cands = [autotune.KernelConfig(block_rows=sub)]
+
+        def runner(cfg, bucket_n):
+            Xs = jnp.ones((bucket_n, d), jnp.float32)
+            ii = jnp.zeros((bucket_n, width), jnp.int32)
+            ws = jnp.ones((bucket_n, width), jnp.float32)
+            tab = jnp.ones((m, d), jnp.float32)
+            return lambda: _bh_pallas(
+                Xs, ii, ws, tab, kind=kind, block_rows=cfg.block_rows,
+                interpret=interpret, lane=lane, storage=storage)
+
+        cfg, cache_hit = autotune.get_config(
+            "bh", n=n, k=width, d=d, dtype=storage, interpret=interpret,
+            candidates=cands, runner=runner)
+        autotuned = True
+        br = legal_tile(cfg.block_rows, n, sub)
+
+    info = {"path": "pallas", "reason": reason, "layout": "vmem",
+            "storage": storage, "block_rows": br, "interpret": interpret,
+            "autotuned": autotuned, "cache_hit": cache_hit}
+    _record("bh_interaction", info)
+    with span("kernel/bh_interaction", n=n, w=width, m=m, kind=kind, **info):
+        return _bh_pallas(X, idx, w, table, kind=kind, block_rows=br,
+                          interpret=interpret, lane=lane, storage=storage)
 
 
 # -- sharded local-rows ELL matvec -----------------------------------------------

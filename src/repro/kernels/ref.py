@@ -67,6 +67,56 @@ def ell_lap_matvec_ref(X: Array, indices: Array, weights: Array) -> Array:
     return deg * X - jnp.einsum("nk,nkd->nd", weights, X[indices])
 
 
+def negative_pair_terms(kind: str, t: Array) -> tuple[Array, Array]:
+    """Per-pair repulsive terms (s_pair, b) at squared distances t, for ALL
+    kinds (W- = 1 off-diagonal): s_pair sums to the repulsive term s — for
+    normalized models that sum IS the partition function Z — and b is the
+    gradient-Laplacian weight of the pair.  The normalized kinds share the
+    unnormalized formulas (table above): ssne pairs like ee (Gaussian),
+    tsne like tee (Student-t).  Lives here (the leaf of the import graph)
+    because every repulsion estimator evaluates it — the sampled negatives
+    (core/objectives.py), the row-sharded backend (sparse/sharding.py) and
+    the Barnes-Hut cell-interaction kernel (farfield.py) — and the kernel
+    layer cannot import the objective layer back."""
+    if kind in ("ee", "ssne"):
+        s_pair = jnp.exp(-t)
+        return s_pair, s_pair
+    if kind in ("tee", "tsne"):
+        K = 1.0 / (1.0 + t)
+        return K, K * K
+    if kind == "epan":
+        return jnp.maximum(1.0 - t, 0.0), (t < 1.0).astype(t.dtype)
+    raise ValueError(f"unknown kind {kind!r}")
+
+
+def bh_interaction_ref(X: Array, idx: Array, w: Array, table: Array,
+                       kind: str) -> tuple[Array, Array]:
+    """Oracle for the Barnes-Hut cell-interaction contract (farfield.py).
+
+    Row n interacts with `w[n, j]` weighted targets `table[idx[n, j]]`
+    (cell centers-of-mass with w = occupancy, or raw points with w = 1):
+
+        t_nj = ||x_n - table[idx[n, j]]||^2
+        (sp, b) = negative_pair_terms(kind, t)
+        s_n = sum_j w_nj * sp_nj                        (N,)
+        F_n = sum_j w_nj * b_nj * (x_n - table[idx_nj]) (N, d)
+
+    so `sum(s_n)` approximates the ordered-pair repulsive sum s and F_n
+    approximates row n of the repulsive Laplacian product L(b) X.  The
+    masking invariant mirrors the ELL padding invariant: a slot with
+    w = 0 contributes exactly zero, whatever its index."""
+    if kind not in KINDS:
+        raise ValueError(f"unknown kind {kind!r}")
+    g = table[idx]                                     # (N, W, d)
+    t = jnp.sum((X[:, None, :] - g) ** 2, axis=-1)     # (N, W)
+    sp, b = negative_pair_terms(kind, t)
+    wb = w * b
+    s_n = jnp.sum(w * sp, axis=-1)
+    F = (jnp.sum(wb, axis=-1, keepdims=True) * X
+         - jnp.einsum("nw,nwd->nd", wb, g))
+    return s_n, F
+
+
 def pairwise_terms_ref(X: Array, Wa: Array, Wb: Array, kind: str) -> PairwiseTerms:
     if kind not in KINDS:
         raise ValueError(f"unknown kind {kind!r}")

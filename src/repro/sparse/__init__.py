@@ -4,8 +4,16 @@
 # candidates.  Covers EVERY model family in the paper: unnormalized kinds
 # (ee/tee/epan) via absolutely-unbiased cyclic-shift negatives, normalized
 # kinds (ssne/tsne) via the sampled ratio estimator for the partition
-# function (core.objectives.energy_and_grad_sparse).  See docs/sparse.md
+# function (core.objectives.energy_and_grad_sparse) or the deterministic
+# Barnes-Hut grid (farfield.py).  See docs/sparse.md and docs/farfield.md
 # for the design.
+from .farfield import (
+    GridPlan,
+    energy_and_grad_tree,
+    make_grid_plan,
+    tree_diagnostics,
+    tree_repulsion,
+)
 from .graph import (
     NeighborGraph,
     SparseAffinities,
@@ -38,6 +46,8 @@ from .sharding import (
 )
 
 __all__ = [
+    "GridPlan", "energy_and_grad_tree", "make_grid_plan",
+    "tree_diagnostics", "tree_repulsion",
     "NeighborGraph", "SparseAffinities", "calibrated_weights_ell",
     "from_dense", "knn_cross", "knn_graph", "reverse_graph",
     "sparse_affinities", "to_dense",

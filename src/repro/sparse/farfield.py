@@ -1,0 +1,400 @@
+"""Deterministic Barnes-Hut far-field repulsion on a fixed-depth grid.
+
+The sampled estimators (cyclic-shift negatives, sampled-Z ratio) trade
+the O(N^2) repulsive sum for variance and EMA machinery.  This module
+trades it for *structure* instead, Barnes-Hut-SNE style (PAPERS.md): a
+fixed-depth quadtree — realized as a pyramid of 2^l x 2^l grids over a
+square bounding box — whose cell centers-of-mass stand in for far-away
+points.  Everything is built from static-shape, scatter-free JAX (the
+ELL discipline of graph.py): one stable sort of the finest-level cell
+ids, `searchsorted` for cell extents, a cumulative sum for cell sums,
+and 2x2 reshape-pooling for the coarser levels.  No PRNG, no EMA, no
+iteration-order nondeterminism — repeated runs are bit-identical.
+
+Opening criterion and exactness of the partition
+------------------------------------------------
+
+With theta in (0, 1] let ``r = max(1, ceil(1/theta))``.  A target cell
+at grid level l is FAR from point n's cell iff their Chebyshev cell
+distance d_l exceeds r; the actual distance is then at least r cell
+widths, so the classic Barnes-Hut ratio obeys ``h_l / dist <= 1/r <=
+theta``.  Each ordered pair (n, m) is handled exactly once:
+
+  * levels run l1..D with ``l1 = floor(log2(r+1)) + 1``; level l1-1 has
+    at most 2^(l1-1) cells per side, so every cell distance there is
+    <= 2^(l1-1) - 1 <= r and the "parent was near" condition below is
+    vacuously true at l1;
+  * at level l the pair is accepted iff d_l > r (far now) AND the
+    parent-cell distance d_{l-1} <= r (was near one level up).  Once
+    d_l > r, d_{l+1} >= 2 d_l - 1 > r, so the first far level is unique;
+  * pairs with d_D <= r land in the NEAR field: exact point-to-point
+    terms over the (2r+1)^2 offset window, with the self pair masked.
+
+The far-field offset window is static: the parent condition bounds
+accepted offsets to Chebyshev norm <= 2r+1, and d_l > r prunes the
+inside, leaving (4r+3)^2 - (2r+1)^2 slots (96 at the default theta=0.5,
+r=2) — an ELL-shaped (N, 96) interaction batch per level, dispatched
+through `kernels.ops.bh_interaction`.
+
+Near-field cells are scanned through `cap` listed slots taken from the
+sorted order (`perm[starts[c] + j]`, an exact gather).  Cells holding
+more than `cap` points spill the excess into one residual
+center-of-mass entry per cell — weight ``count - cap``, COM of the
+unlisted suffix — so the partition function stays a sum over ALL pairs.
+(For the point's own cell the residual weight drops the point itself
+when its rank >= cap; the shared COM still includes it — the one
+deliberate approximation, vanishing as cap is 4x the mean occupancy.)
+
+theta = 0 selects the EXHAUSTIVE mode: every ordered pair via the
+cyclic index matrix (N, N-1) — O(N^2) memory, test-scale only, the
+oracle the parity tests pin the tree against.
+
+`tree_diagnostics` reports the partition invariant (total interaction
+weight == n(n-1) exactly), mean cells visited, the worst realized
+opening ratio, and the residual spill mass.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.obs import span
+
+Array = jnp.ndarray
+
+
+# -- plan ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GridPlan:
+    """Static shape parameters of the far-field decomposition (hashable —
+    it rides jit as a static argument; everything data-dependent stays in
+    the traced arrays)."""
+
+    n: int          # number of points
+    theta: float    # opening parameter (0 = exhaustive)
+    r: int          # far-field Chebyshev radius in cells (0 = exhaustive)
+    l1: int         # coarsest far-field level
+    depth: int      # finest level D (grid is 2^D per side)
+    cap: int        # listed near-field slots per cell
+    chunk: int = 128  # max interaction-batch width per kernel call
+
+    @property
+    def exhaustive(self) -> bool:
+        return self.r == 0
+
+
+def make_grid_plan(n: int, *, theta: float = 0.5, depth: int = 0,
+                   cap: int = 0, chunk: int = 128) -> GridPlan:
+    """Resolve the static decomposition for n points at opening theta.
+
+    `depth`/`cap` of 0 mean auto: depth targets ~4 points per finest
+    cell (D = ceil(log4(n/4)), floored at l1), cap is 4x the resulting
+    mean occupancy (floored at 16) so residual spill is rare."""
+    if n < 2:
+        raise ValueError(f"need at least 2 points, got n={n}")
+    if not 0.0 <= theta <= 1.0:
+        raise ValueError(f"theta must be in [0, 1], got {theta}")
+    if chunk < 1:
+        raise ValueError(f"chunk must be positive, got {chunk}")
+    if theta == 0.0:
+        return GridPlan(n=n, theta=0.0, r=0, l1=0, depth=0, cap=0,
+                        chunk=chunk)
+    r = max(1, math.ceil(1.0 / theta))
+    l1 = int(math.floor(math.log2(r + 1))) + 1
+    if depth == 0:
+        depth = max(l1, math.ceil(0.5 * math.log2(max(n, 16) / 4)))
+    if depth < l1:
+        raise ValueError(
+            f"tree_depth={depth} is coarser than the minimum far level "
+            f"l1={l1} for theta={theta} (r={r})")
+    if cap == 0:
+        cap = max(16, 4 * math.ceil(n / 4 ** depth))
+    if cap < 1:
+        raise ValueError(f"tree_cap must be positive, got {cap}")
+    return GridPlan(n=n, theta=float(theta), r=r, l1=l1, depth=int(depth),
+                    cap=int(cap), chunk=int(chunk))
+
+
+def _far_offsets(r: int) -> np.ndarray:
+    """Static (W, 2) offset window for the far field: Chebyshev norm in
+    (r, 2r+1] — inside is near-by-definition, outside is unreachable
+    when the parent was near."""
+    span_ = np.arange(-(2 * r + 1), 2 * r + 2)
+    dx, dy = np.meshgrid(span_, span_, indexing="ij")
+    cheb = np.maximum(np.abs(dx), np.abs(dy))
+    keep = cheb > r
+    return np.stack([dx[keep], dy[keep]], axis=-1).astype(np.int32)
+
+
+def _near_offsets(r: int) -> np.ndarray:
+    """Static ((2r+1)^2, 2) window of near cells: Chebyshev norm <= r."""
+    span_ = np.arange(-r, r + 1)
+    dx, dy = np.meshgrid(span_, span_, indexing="ij")
+    return np.stack([dx.ravel(), dy.ravel()], axis=-1).astype(np.int32)
+
+
+# -- grid build (scatter-free) -------------------------------------------------
+
+
+def _grid_coords(X: Array, depth: int) -> tuple[Array, Array]:
+    """Finest-level integer cell coords on a SQUARE bounding box.
+
+    The box is square (one extent for both dims) so cells are square and
+    the Chebyshev-distance opening bound translates to euclidean
+    distance.  Coarser coords are integer shifts of these (`c >> (D-l)`),
+    which makes level nesting exact regardless of float rounding.
+    Returns (coords (N, 2) int32, h finest cell width)."""
+    G = 1 << depth
+    lo = jnp.min(X, axis=0)
+    extent = jnp.max(jnp.max(X, axis=0) - lo) * (1.0 + 1e-6) + 1e-30
+    h = extent / G
+    c = jnp.clip(jnp.floor((X - lo) / h).astype(jnp.int32), 0, G - 1)
+    return c, h
+
+
+def _finest_aggregates(coords: Array, X: Array, G: int):
+    """Per-cell occupancy, coordinate sums and sorted-order extents at
+    the finest level, all scatter-free: stable sort by cell id, then
+    searchsorted extents and a cumulative-sum difference.
+
+    Returns (cid (N,), perm (N,), starts (G^2,), counts (G^2,),
+    sums (G^2, d), csum (N+1, d) cumulative sums in sorted order)."""
+    cid = coords[:, 0] * G + coords[:, 1]
+    perm = jnp.argsort(cid, stable=True)
+    cs = cid[perm]
+    ids = jnp.arange(G * G, dtype=cid.dtype)
+    starts = jnp.searchsorted(cs, ids, side="left")
+    ends = jnp.searchsorted(cs, ids, side="right")
+    counts = ends - starts
+    csum = jnp.concatenate(
+        [jnp.zeros((1, X.shape[1]), X.dtype), jnp.cumsum(X[perm], axis=0)])
+    sums = csum[ends] - csum[starts]
+    return cid, perm, starts, counts, sums, csum
+
+
+def _pool(counts: Array, sums: Array, G: int) -> tuple[Array, Array]:
+    """One 2x2 aggregation step: level-l cell stats from level l+1."""
+    H = G // 2
+    c = counts.reshape(H, 2, H, 2).sum(axis=(1, 3))
+    s = sums.reshape(H, 2, H, 2, -1).sum(axis=(1, 3))
+    return c.reshape(H * H), s.reshape(H * H, -1)
+
+
+# -- interaction batches -------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Batch:
+    """One ELL-shaped interaction batch: row n meets `w[n, j]` copies of
+    `table[idx[n, j]]`.  `h_cell` is the cell width of the level the
+    targets aggregate (0 for exact point targets) — diagnostics use it
+    for the realized opening ratio."""
+
+    idx: Array      # (N, W) int32
+    w: Array        # (N, W) f32
+    table: Array    # (M, d)
+    h_cell: Array | float
+    tag: str
+
+
+def _interaction_batches(X: Array, plan: GridPlan) -> list[_Batch]:
+    """Decompose all N(N-1) ordered pairs into interaction batches.
+
+    The weights over all batches sum to exactly n(n-1) — the partition
+    invariant `tree_diagnostics` reports as `tree_pairs`."""
+    n, d = X.shape
+    if plan.exhaustive:
+        rows = jnp.arange(n, dtype=jnp.int32)[:, None]
+        J = (rows + jnp.arange(1, n, dtype=jnp.int32)[None, :]) % n
+        return [_Batch(idx=J, w=jnp.ones((n, n - 1), jnp.float32),
+                       table=X, h_cell=0.0, tag="exhaustive")]
+
+    D, r, cap = plan.depth, plan.r, plan.cap
+    G = 1 << D
+    coords, h = _grid_coords(X, D)
+    cid, perm, starts, counts, sums, csum = _finest_aggregates(coords, X, G)
+
+    # per-level stats, finest -> coarsest (index by level l)
+    counts_l = {D: counts}
+    sums_l = {D: sums}
+    for l in range(D - 1, plan.l1 - 1, -1):
+        counts_l[l], sums_l[l] = _pool(counts_l[l + 1], sums_l[l + 1],
+                                       1 << (l + 1))
+
+    batches: list[_Batch] = []
+
+    # far field: one (N, |offsets|) batch per level against that level's
+    # center-of-mass table
+    offs = _far_offsets(r)                                     # (Wf, 2)
+    for l in range(plan.l1, D + 1):
+        Gl = 1 << l
+        cl = coords >> (D - l)                                 # (N, 2)
+        tx = cl[:, 0:1] + offs[None, :, 0]                     # (N, Wf)
+        ty = cl[:, 1:2] + offs[None, :, 1]
+        inb = (tx >= 0) & (tx < Gl) & (ty >= 0) & (ty < Gl)
+        # parent-was-near: Chebyshev distance of the parent cells <= r
+        # (vacuous at l1 by construction; the shift keeps it exact)
+        pd = jnp.maximum(jnp.abs((tx >> 1) - (cl[:, 0:1] >> 1)),
+                         jnp.abs((ty >> 1) - (cl[:, 1:2] >> 1)))
+        accept = inb & (pd <= r)
+        tcell = jnp.clip(tx, 0, Gl - 1) * Gl + jnp.clip(ty, 0, Gl - 1)
+        w = jnp.where(accept, counts_l[l][tcell], 0).astype(jnp.float32)
+        com = sums_l[l] / jnp.maximum(counts_l[l], 1)[:, None]
+        batches.append(_Batch(idx=tcell.astype(jnp.int32), w=w, table=com,
+                              h_cell=h * (1 << (D - l)), tag=f"far-l{l}"))
+
+    # near field: exact listed pairs over the (2r+1)^2 window at the
+    # finest level, `cap` sorted-order slots per cell, self masked
+    noffs = _near_offsets(r)                                   # (Wn, 2)
+    tx = coords[:, 0:1] + noffs[None, :, 0]                    # (N, Wn)
+    ty = coords[:, 1:2] + noffs[None, :, 1]
+    inb = (tx >= 0) & (tx < G) & (ty >= 0) & (ty < G)
+    tcell = jnp.clip(tx, 0, G - 1) * G + jnp.clip(ty, 0, G - 1)
+    tcount = jnp.where(inb, counts[tcell], 0)                  # (N, Wn)
+
+    slot = jnp.arange(cap, dtype=jnp.int32)                    # (cap,)
+    pos = starts[tcell][:, :, None] + slot[None, None, :]      # (N, Wn, cap)
+    listed = slot[None, None, :] < tcount[:, :, None]
+    partner = perm[jnp.clip(pos, 0, n - 1)]                    # (N, Wn, cap)
+    self_idx = jnp.arange(n, dtype=partner.dtype)[:, None, None]
+    w_listed = (listed & (partner != self_idx)).astype(jnp.float32)
+    Wn = noffs.shape[0]
+    batches.append(_Batch(idx=partner.reshape(n, Wn * cap).astype(jnp.int32),
+                          w=w_listed.reshape(n, Wn * cap), table=X,
+                          h_cell=0.0, tag="near"))
+
+    # residual: cells spilling past `cap` contribute one COM entry of
+    # the unlisted suffix; the own-cell entry drops self when self is
+    # in the suffix (rank >= cap)
+    listed_n = jnp.minimum(counts, cap)
+    listed_sum = csum[starts + listed_n] - csum[starts]
+    res_cnt = counts - listed_n                                # (G^2,)
+    res_com = (sums - listed_sum) / jnp.maximum(res_cnt, 1)[:, None]
+    inv_perm = jnp.argsort(perm)
+    rank = inv_perm - starts[cid]                              # (N,)
+    own = (noffs[:, 0] == 0) & (noffs[:, 1] == 0)              # (Wn,)
+    self_spill = (rank >= cap)[:, None] & own[None, :]
+    w_res = jnp.where(inb, res_cnt[tcell], 0) - self_spill
+    batches.append(_Batch(idx=tcell.astype(jnp.int32),
+                          w=jnp.maximum(w_res, 0).astype(jnp.float32),
+                          table=res_com, h_cell=h, tag="residual"))
+    return batches
+
+
+# -- repulsion + diagnostics ---------------------------------------------------
+
+
+def _apply_chunked(X: Array, batch: _Batch, kind: str, chunk: int,
+                   kernel_args: dict) -> tuple[Array, Array]:
+    """Run one batch through the cell-interaction kernel, split into
+    <= chunk-wide column slices so the gathered target tensor stays
+    inside the kernel's VMEM budget."""
+    s = jnp.zeros((X.shape[0],), jnp.float32)
+    F = jnp.zeros(X.shape, jnp.float32)
+    for c0 in range(0, batch.idx.shape[1], chunk):
+        sl = slice(c0, min(c0 + chunk, batch.idx.shape[1]))
+        si, Fi = ops.bh_interaction(X, batch.idx[:, sl], batch.w[:, sl],
+                                    batch.table, kind, **kernel_args)
+        s = s + si
+        F = F + Fi
+    return s, F
+
+
+def tree_repulsion(X: Array, plan: GridPlan, kind: str,
+                   **kernel_args) -> tuple[Array, Array]:
+    """Deterministic repulsive terms from the grid decomposition:
+    ``s`` (scalar, the full ordered-pair repulsive sum — for normalized
+    kinds this IS the partition function Z, exact up to cell
+    aggregation) and ``F = L(b) X`` (N, d).  Trace-safe; the grid is
+    rebuilt from X every call (it must be — X moves every iteration),
+    under a ``grid-build`` span so the rebuild cost shows up as a phase
+    in the run telemetry."""
+    if X.ndim != 2 or X.shape[1] != 2:
+        raise ValueError(
+            f"the tree backend is 2-D only (quadtree), got d={X.shape[-1]}")
+    with span("grid-build", phase=True, n=plan.n, depth=plan.depth,
+              r=plan.r, cap=plan.cap, exhaustive=plan.exhaustive):
+        batches = _interaction_batches(X, plan)
+    s = jnp.zeros((), jnp.float32)
+    F = jnp.zeros(X.shape, jnp.float32)
+    for b in batches:
+        si, Fi = _apply_chunked(X, b, kind, plan.chunk, kernel_args)
+        s = s + jnp.sum(si)
+        F = F + Fi
+    return s, F
+
+
+def energy_and_grad_tree(X: Array, saff, lam, kind: str, plan: GridPlan,
+                         *, with_grad: bool = True,
+                         **kernel_args) -> tuple[Array, Array | None]:
+    """Deterministic O(N log N) energy/gradient: exact attractive terms
+    over the calibrated ELL graph (shared with energy_and_grad_sparse via
+    core.objectives.sparse_attractive_*) plus grid far-field repulsion.
+
+    Unlike the sampled estimator there is no PRNG key, no z_prev/EMA and
+    no return_state: the partition function of the normalized kinds is
+    the tree sum itself — deterministic, so nothing needs smoothing, and
+    the 1/Z gradient factor uses it directly.  `kernel_args` forward to
+    `kernels.ops.bh_interaction` (impl/storage_dtype/...)."""
+    impl = tuple(sorted(kernel_args.items()))
+    return _energy_and_grad_tree(X, saff, lam, kind=kind, plan=plan,
+                                 with_grad=with_grad, impl=impl)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kind", "plan", "with_grad", "impl"))
+def _energy_and_grad_tree(X, saff, lam, *, kind, plan, with_grad, impl):
+    from repro.core.objectives import (is_normalized, sparse_attractive_lap,
+                                       sparse_attractive_terms)
+    kernel_args = dict(impl)
+    e_plus, aw = sparse_attractive_terms(X, saff, kind)
+    s, F = tree_repulsion(X, plan, kind, **kernel_args)
+    normalized = is_normalized(kind)
+    E = e_plus + lam * (jnp.log(s) if normalized else s)
+    if not with_grad:
+        return E, None
+    la_x = sparse_attractive_lap(X, saff, kind, aw)
+    lam_rep = (lam / s) if normalized else lam
+    G = 4.0 * (la_x - lam_rep * F)
+    return E, G
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def tree_diagnostics(X: Array, plan: GridPlan) -> dict[str, Array]:
+    """Decomposition health, from the same batches the repulsion uses:
+
+    - ``tree_pairs``: total interaction weight — EXACTLY n(n-1) when the
+      partition is correct (the invariant tests pin);
+    - ``tree_cells``: mean far-field cells accepted per point;
+    - ``tree_theta_ratio``: worst realized opening ratio h_cell/dist
+      over accepted far-field interactions (<= theta by construction);
+    - ``tree_overflow``: total residual (past-cap) interaction weight.
+    """
+    batches = _interaction_batches(X, plan)
+    # f32 keeps integer sums exact below 2^24 pairs (n ~ 4k) — the scale
+    # the exact-equality invariant test runs at
+    pairs = jnp.zeros((), jnp.float32)
+    cells = jnp.zeros((), jnp.float32)
+    ratio = jnp.zeros((), jnp.float32)
+    overflow = jnp.zeros((), jnp.float32)
+    for b in batches:
+        pairs = pairs + jnp.sum(b.w.astype(pairs.dtype))
+        if b.tag.startswith("far"):
+            cells = cells + jnp.sum(b.w > 0) / plan.n
+            dist = jnp.sqrt(jnp.sum(
+                (X[:, None, :] - b.table[b.idx]) ** 2, axis=-1))
+            rat = jnp.where(b.w > 0, b.h_cell / jnp.maximum(dist, 1e-30),
+                            0.0)
+            ratio = jnp.maximum(ratio, jnp.max(rat))
+        elif b.tag == "residual":
+            overflow = overflow + jnp.sum(b.w)
+    return {"tree_pairs": pairs, "tree_cells": cells,
+            "tree_theta_ratio": ratio, "tree_overflow": overflow}

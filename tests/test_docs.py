@@ -1,0 +1,42 @@
+"""Executable documentation: every fenced ```python block in docs/*.md
+must run cleanly (repro/analysis/docsnippets.py — the CI step drives the
+same extractor; this test makes doc rot fail a normal local pytest run)."""
+import pathlib
+
+import pytest
+
+from repro.analysis.docsnippets import extract_snippets, run_file
+
+DOCS = sorted((pathlib.Path(__file__).parent.parent / "docs").glob("*.md"))
+
+
+def test_docs_exist_and_carry_examples():
+    assert DOCS, "docs/ directory is empty?"
+    total = sum(len(extract_snippets(d)) for d in DOCS)
+    assert total >= 4, "docs lost their runnable examples"
+
+
+@pytest.mark.parametrize("doc", DOCS, ids=[d.name for d in DOCS])
+def test_doc_snippets_execute(doc):
+    failures = run_file(doc)
+    msg = "\n\n".join(f"{sn.label}\n{tb}" for sn, tb in failures)
+    assert not failures, f"doc snippet(s) failed:\n{msg}"
+
+
+def test_extractor_sees_fences(tmp_path):
+    md = tmp_path / "t.md"
+    md.write_text("intro\n```python\nx = 1 + 1\n```\n\n"
+                  "```text\nnot code\n```\n\n"
+                  "```python\nassert x == 2\n```\n")
+    sns = extract_snippets(md)
+    assert [s.lineno for s in sns] == [2, 10]
+    assert run_file(md) == []   # shared namespace: block 2 sees block 1's x
+
+
+def test_extractor_reports_failures_with_location(tmp_path):
+    md = tmp_path / "bad.md"
+    md.write_text("```python\nraise RuntimeError('rotted example')\n```\n")
+    failures = run_file(md)
+    assert len(failures) == 1
+    sn, tb = failures[0]
+    assert sn.lineno == 1 and "rotted example" in tb
